@@ -1,0 +1,77 @@
+"""Cross-plane integration: ReGate's energy analysis applied to OUR ten
+assigned architectures (the execution plane's workloads), two ways:
+
+* ``arch_power_table`` — the analytic operator traces
+  (``opgen.arch_workload``) through the five power-gating designs;
+* ``regate_on_dryrun_cells`` — the COMPILED dry-run statistics (HLO FLOPs
+  / HBM bytes / collective bytes per device) folded into a trace and
+  evaluated, so the energy numbers correspond to the program XLA actually
+  built for the production mesh.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.core.opgen import Op, Workload, arch_workload
+from repro.core.policies import evaluate_all, savings_vs_nopg
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def arch_power_table() -> list[tuple]:
+    out = []
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for sname, status in cfg.supported_shapes().items():
+            if status != "ok":
+                continue
+            wl = arch_workload(cfg, SHAPES[sname])
+            reps = evaluate_all(wl, "NPU-D")
+            sv = savings_vs_nopg(reps)
+            out.append((
+                f"arch_save/{arch}/{sname}",
+                f"full={sv['ReGate-Full']*100:.1f}% "
+                f"base={sv['ReGate-Base']*100:.1f}%",
+                f"static_frac={reps['NoPG'].static_frac:.2f}"))
+    return out
+
+
+def _dryrun_workload(r: dict) -> Workload:
+    """Fold a dry-run cell's per-device HLO statistics into a 3-phase
+    trace: compute+memory overlapped per layer, collectives between."""
+    layers = max(1, int(r.get("n_layers", 32)))
+    coll = sum(r["collective_bytes"].values())
+    ops = []
+    per = Op("layer_compute",
+             flops_sa=r["flops"] * 0.92 / layers,
+             flops_vu=r["flops"] * 0.08 / layers,
+             bytes_hbm=r["memory_bytes"] / layers,
+             sram_demand=96 << 20 if r["shape"] == "train_4k" else 8 << 20,
+             matmul_dims=None)
+    cop = Op("layer_collective", bytes_ici=coll / layers, collective=True,
+             sram_demand=8 << 20)
+    for _ in range(layers):
+        ops.append(per)
+        ops.append(cop)
+    return Workload(f"{r['arch']}-{r['shape']}-dryrun", "train",
+                    tuple(ops), n_chips=r["n_chips"])
+
+
+def regate_on_dryrun_cells() -> list[tuple]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "singlepod",
+                                              "*.json"))):
+        r = json.load(open(path))
+        if str(r.get("status")) != "ok" or r.get("tag"):
+            continue
+        cfg = get_arch(r["arch"])
+        r["n_layers"] = cfg.n_layers
+        wl = _dryrun_workload(r)
+        sv = savings_vs_nopg(evaluate_all(wl, "NPU-D"))
+        out.append((f"dryrun_save/{r['arch']}/{r['shape']}",
+                    f"full={sv['ReGate-Full']*100:.1f}%",
+                    "energy model on compiled-HLO stats"))
+    return out

@@ -1,0 +1,49 @@
+"""Roofline table assembled from the dry-run JSON artifacts.
+
+Reads results/dryrun/{singlepod,multipod}/*.json (produced by
+``python -m repro.launch.dryrun --all [--multi-pod]``) and emits the
+per-cell three-term roofline rows for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load(pod: str = "singlepod") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pod, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def rows(pod: str = "singlepod") -> list[tuple]:
+    out = []
+    for r in load(pod):
+        cell = f"{r['arch']}/{r['shape']}"
+        if r.get("tag"):
+            cell += f"#{r['tag']}"
+        status = str(r.get("status", ""))
+        if status != "ok":
+            out.append((f"roofline/{cell}", status, ""))
+            continue
+        out.append((
+            f"roofline/{cell}",
+            f"compute={r['compute_s']*1e3:.1f}ms "
+            f"memory={r['memory_s']*1e3:.1f}ms "
+            f"collective={r['collective_s']*1e3:.1f}ms",
+            f"dom={r['dominant']} hbm={r['hbm_gb_per_device']}GiB "
+            f"flops_ratio={r['flops_ratio']:.2f}"))
+    return out
+
+
+def main() -> list[tuple]:
+    out = rows("singlepod")
+    mp = rows("multipod")
+    if mp:
+        out.append(("roofline/multipod_cells", len(mp), "2x16x16 mesh"))
+    return out

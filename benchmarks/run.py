@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure plus the
+dry-run roofline table. Prints ``name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig17,fig19] [--list]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks.figures import REGISTRY
+    from benchmarks import arch_power, roofline_table
+
+    benches = dict(REGISTRY)
+    benches["roofline_table"] = roofline_table.main
+    benches["arch_power_table"] = arch_power.arch_power_table
+    benches["regate_on_dryrun_cells"] = arch_power.regate_on_dryrun_cells
+
+    if args.list:
+        for name in benches:
+            print(name)
+        return 0
+
+    filters = args.only.split(",") if args.only else None
+    print("name,value,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            for row in fn():
+                key, val, note = (list(row) + ["", ""])[:3]
+                print(f"{key},{val},{note}")
+            print(f"_timing/{name},{time.time()-t0:.2f}s,")
+        except Exception as e:  # noqa
+            failures += 1
+            print(f"_error/{name},{type(e).__name__}: {e},")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,46 @@
+"""Reproduce the paper's headline analysis end-to-end: Figs 3/17/19/24
+numbers for the whole Table-1 suite, plus the NPU-generation sweep.
+
+  PYTHONPATH=src python examples/power_gating_study.py
+"""
+import statistics
+
+from repro.core.carbon import yearly_carbon
+from repro.core.hw import NPUS
+from repro.core.opgen import paper_suite
+from repro.core.policies import POLICIES, evaluate_all, savings_vs_nopg
+
+
+def main():
+    print(f"{'workload':24s} {'static%':>8s} "
+          + "".join(f"{p:>13s}" for p in POLICIES[1:])
+          + f" {'ovFull%':>9s} {'carbon%':>9s}")
+    per_policy = {p: [] for p in POLICIES[1:]}
+    for wl in paper_suite():
+        reps = evaluate_all(wl, "NPU-D")
+        sv = savings_vs_nopg(reps)
+        ov = reps["ReGate-Full"].runtime_s / reps["NoPG"].runtime_s - 1
+        c_no = yearly_carbon(reps["NoPG"].avg_power_w, "NPU-D", False)
+        c_rg = yearly_carbon(reps["ReGate-Full"].avg_power_w, "NPU-D", True)
+        carbon = 1 - c_rg.total_kg_per_year / c_no.total_kg_per_year
+        row = f"{wl.name:24s} {reps['NoPG'].static_frac*100:7.1f}%"
+        for p in POLICIES[1:]:
+            per_policy[p].append(sv[p])
+            row += f" {sv[p]*100:11.1f}%"
+        print(row + f" {ov*100:8.3f}% {carbon*100:8.1f}%")
+    print("-" * 110)
+    print("averages: " + "  ".join(
+        f"{p}={statistics.mean(v)*100:.1f}%" for p, v in per_policy.items()))
+    print("paper:    ReGate-Full 8.5-32.8% (avg 15.5%), overhead <0.5%, "
+          "carbon 31.1-62.9%")
+
+    print("\nper-generation ReGate-Full savings (paper Fig 23):")
+    for gen in NPUS:
+        vals = [savings_vs_nopg(evaluate_all(w, gen))["ReGate-Full"]
+                for w in paper_suite()]
+        print(f"  {gen}: avg {statistics.mean(vals)*100:.1f}%  "
+              f"range {min(vals)*100:.1f}-{max(vals)*100:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: the paper's power-gating analysis in five lines, plus one
+training step of an assigned architecture.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_arch
+from repro.core.opgen import llm_workload
+from repro.core.policies import evaluate_all, savings_vs_nopg
+from repro.data.specs import make_batch
+from repro.configs.base import ShapeConfig
+from repro.models import registry
+from repro.models.param import init_params
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import TrainState, make_train_step
+
+# --- 1. ReGate: energy of an LLM decode workload under all five designs
+wl = llm_workload("llama3-8b", "decode", batch=8, n_chips=1)
+reports = evaluate_all(wl, "NPU-D")
+savings = savings_vs_nopg(reports)
+print("== ReGate energy savings vs NoPG (llama3-8b decode, NPU-D) ==")
+for policy, s in savings.items():
+    r = reports[policy]
+    print(f"  {policy:12s} {s*100:6.2f}%   "
+          f"avg power {r.avg_power_w:6.1f} W   "
+          f"static fraction {r.static_frac:.2f}")
+
+# --- 2. one train step of an assigned architecture (reduced, CPU)
+cfg = get_arch("qwen3-32b").reduced()
+opt = AdamWConfig(total_steps=10)
+params = init_params(registry.param_specs(cfg), jax.random.PRNGKey(0))
+state = TrainState.create(params, opt)
+step = jax.jit(make_train_step(cfg, opt))
+batch = make_batch(cfg, ShapeConfig("t", 64, 4, "train"), seed=0)
+state, metrics = step(state, batch)
+print(f"\n== qwen3-32b (reduced) train step: loss={float(metrics['loss']):.3f}"
+      f" grad_norm={float(metrics['grad_norm']):.3f} ==")

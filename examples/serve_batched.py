@@ -1,0 +1,8 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-3b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

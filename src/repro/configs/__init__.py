@@ -1,0 +1,9 @@
+from repro.configs.base import (
+    ALL_ARCH_MODULES, SHAPES, ArchConfig, MLAConfig, MoEConfig, ShapeConfig,
+    SSMConfig, get_arch, list_archs, register,
+)
+
+__all__ = [
+    "ALL_ARCH_MODULES", "SHAPES", "ArchConfig", "MLAConfig", "MoEConfig",
+    "ShapeConfig", "SSMConfig", "get_arch", "list_archs", "register",
+]

@@ -1,0 +1,16 @@
+"""The paper's contribution: ReGate power-gating co-design.
+
+hw/power      — NPU-A..E specs (Table 2/3) + calibrated power model
+sa_gating     — PE-level spatial SA gating (Figs 10-13)
+isa/passes    — setpm ISA extension + compiler passes (Figs 14-15, §4.3)
+opgen/policies— operator traces + the five designs (§6)
+carbon        — operational/embodied carbon (Figs 24-25)
+slo           — SLO-constrained config sweep (Fig 2)
+hlo/roofline  — compiled-HLO cost extraction for the dry-run
+"""
+from repro.core.hw import NPUS, TARGET, get_npu
+from repro.core.policies import POLICIES, evaluate, evaluate_all, \
+    savings_vs_nopg
+
+__all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "evaluate",
+           "evaluate_all", "savings_vs_nopg"]

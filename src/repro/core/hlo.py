@@ -1,0 +1,508 @@
+"""Post-optimization HLO text analyzer.
+
+``cost_analysis()`` counts while-loop bodies ONCE (verified empirically:
+a 10-iteration scanned matmul reports ~1x the matmul FLOPs), so scan-over-
+layers models would under-report by ~n_layers. This module parses
+``compiled.as_text()``, builds the computation call graph, multiplies every
+computation's costs by its execution count (while trip counts come from the
+``known_trip_count`` backend_config XLA attaches to scan-derived loops),
+and extracts:
+
+* dot FLOPs (exact, from contracting/batch dims);
+* per-collective-type bytes (operand sizes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, per device);
+* an HBM traffic estimate: operand+output bytes of top-level instructions
+  at fusion granularity (fusion internals are on-chip and not counted).
+
+Methodology notes recorded in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/outputs plausibly move through HBM at fusion
+# granularity (conservative, consistent across variants)
+MEMORY_OPS = {"fusion", "dot", "convolution", "copy", "dynamic-slice",
+              "dynamic-update-slice", "slice", "concatenate", "transpose",
+              "reshape", "reduce", "sort", "gather", "scatter", "pad",
+              "broadcast", "iota", "select-and-scatter", "reduce-window",
+              "cholesky", "triangular-solve", "rng", "convert",
+              "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string (handles tuples by summing tokens)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HloInstr:
+    name: str
+    opcode: str
+    shape: str
+    operands: list[str]
+    attrs: str
+    is_root: bool = False
+
+    @property
+    def out_bytes(self) -> int:
+        return shape_bytes(self.shape)
+
+
+@dataclass
+class HloComputation:
+    name: str
+    instrs: list[HloInstr] = field(default_factory=list)
+    by_name: dict[str, HloInstr] = field(default_factory=dict)
+
+    def operand_bytes(self, instr: HloInstr) -> int:
+        total = 0
+        for op in instr.operands:
+            d = self.by_name.get(op)
+            if d is not None:
+                total += d.out_bytes
+        return total
+
+
+@dataclass
+class HloModule:
+    computations: dict[str, HloComputation]
+    entry: str
+    # computation name -> execution count relative to one module execution
+    multipliers: dict[str, float] = field(default_factory=dict)
+    fusion_bodies: set = field(default_factory=set)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_NAME_EQ = re.compile(r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_SCALAR_SHAPE = re.compile(r"[\w\[\],]+(?:\{[^}]*\})*")
+_OPCODE = re.compile(r"([\w\-]+)\(")
+
+
+def _parse_instr_line(line: str):
+    """Parse one instruction line; robust to tuple shapes containing
+    /*index=N*/ comments (which break naive regexes on '=')."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    is_root, name = m.groups()
+    rest = line[m.end():]
+    if rest.startswith("("):  # tuple shape: bracket-match
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        shape = rest[:end + 1]
+        rest2 = rest[end + 1:].lstrip()
+    else:
+        sm = _SCALAR_SHAPE.match(rest)
+        if not sm:
+            return None
+        shape = sm.group(0)
+        rest2 = rest[sm.end():].lstrip()
+    om = _OPCODE.match(rest2)
+    if not om:
+        return None
+    opcode = om.group(1)
+    operands, attrs = _split_operands(rest2[om.end():])
+    return HloInstr(name=name, opcode=opcode, shape=shape,
+                    operands=operands, attrs=attrs, is_root=bool(is_root))
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_WHILE_BODY = re.compile(r"body=%?([\w.\-]+)")
+_WHILE_COND = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_COND_TF = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+
+
+def _split_operands(argstr: str) -> tuple[list[str], str]:
+    """Split the '(...)' operand list from the instruction tail; returns
+    (operand names, attrs-after-close-paren)."""
+    depth = 1
+    i = 0
+    while i < len(argstr) and depth > 0:
+        ch = argstr[i]
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        i += 1
+    inner = argstr[:i - 1]
+    attrs = argstr[i:]
+    ops = []
+    d = 0
+    cur = ""
+    for ch in inner:
+        if ch in "([{":
+            d += 1
+        elif ch in ")]}":
+            d -= 1
+        if ch == "," and d == 0:
+            ops.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        ops.append(cur.strip())
+    names = []
+    for o in ops:
+        o = re.sub(r"/\*.*?\*/", "", o).strip()  # strip /*index=N*/ comments
+        if o.startswith("%"):
+            names.append(o[1:].split(" ")[0].split(")")[0])
+        else:
+            m = re.match(r"%?([\w.\-]+)", o)
+            if m:
+                names.append(m.group(1))
+    return names, attrs
+
+
+def parse_hlo(text: str) -> HloModule:
+    comps: dict[str, HloComputation] = {}
+    entry = ""
+    cur: Optional[HloComputation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.endswith("{") and ("->" in line):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                name = m.group(2)
+                cur = HloComputation(name)
+                comps[name] = cur
+                if m.group(1):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr_line(line)
+        if ins is None:
+            continue
+        cur.instrs.append(ins)
+        cur.by_name[ins.name] = ins
+
+    mod = HloModule(comps, entry)
+    _compute_multipliers(mod)
+    return mod
+
+
+def _compute_multipliers(mod: HloModule) -> None:
+    mult: dict[str, float] = {c: 0.0 for c in mod.computations}
+    if mod.entry not in mod.computations:
+        # fall back: the last computation is usually ENTRY
+        mod.entry = next(reversed(mod.computations))
+    fusion_bodies: set = set()
+    todo = [(mod.entry, 1.0)]
+    seen_edges = 0
+    while todo:
+        name, m = todo.pop()
+        if name not in mod.computations:
+            continue
+        mult[name] += m
+        comp = mod.computations[name]
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                trip = 1.0
+                tm = _TRIP.search(ins.attrs)
+                if tm:
+                    trip = float(tm.group(1))
+                bm = _WHILE_BODY.search(ins.attrs)
+                cm = _WHILE_COND.search(ins.attrs)
+                if bm:
+                    todo.append((bm.group(1), m * trip))
+                if cm:
+                    todo.append((cm.group(1), m * (trip + 1)))
+            elif ins.opcode == "conditional":
+                for b in _BRANCHES.findall(ins.attrs):
+                    for nm in b.split(","):
+                        todo.append((nm.strip().lstrip("%"), m))
+                for nm in _COND_TF.findall(ins.attrs):
+                    todo.append((nm, m))
+            else:
+                cm = _CALLS.search(ins.attrs)
+                if cm:
+                    todo.append((cm.group(1), m))
+                    if ins.opcode == "fusion":
+                        fusion_bodies.add(cm.group(1))
+                am = _TO_APPLY.search(ins.attrs)
+                if am:
+                    fusion_bodies.add(am.group(1))
+        seen_edges += 1
+        if seen_edges > 100000:
+            break
+    mod.multipliers = mult
+    mod.fusion_bodies = fusion_bodies
+
+
+# --------------------------------------------------------------------------
+# cost extraction
+# --------------------------------------------------------------------------
+
+_DIMS = re.compile(r"(\w+)\[([\d,]*)\]")
+_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+def _dims_of(shape: str) -> list[int]:
+    m = _DIMS.search(shape)
+    if not m or not m.group(2):
+        return []
+    return [int(x) for x in m.group(2).split(",")]
+
+
+def dot_flops(comp: HloComputation, ins: HloInstr) -> float:
+    """2 * batch * M * N * K from the lhs shape and dim numbers."""
+    if len(ins.operands) < 2:
+        return 0.0
+    lhs = comp.by_name.get(ins.operands[0])
+    if lhs is None:
+        return 0.0
+    ldims = _dims_of(lhs.shape)
+    odims = _dims_of(ins.shape)
+    cm = _CDIMS.search(ins.attrs)
+    bm = _BDIMS.search(ins.attrs)
+    cidx = [int(x) for x in cm.group(1).split(",")] if cm and cm.group(1) \
+        else []
+    bidx = [int(x) for x in bm.group(1).split(",")] if bm and bm.group(1) \
+        else []
+    k = 1
+    for i in cidx:
+        if i < len(ldims):
+            k *= ldims[i]
+    out = 1
+    for d in odims:
+        out *= d
+    return 2.0 * out * k
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    memory_bytes: float = 0.0
+    collective_bytes: dict[str, float] = field(default_factory=dict)
+    dots: int = 0
+    unscaled_flops: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# ops that only touch a slice of their big operand: charge slice-sized
+# traffic, not the whole buffer (scan iterations would otherwise be charged
+# the full carry/xs array each step)
+_SLICE_READS = {"dynamic-slice", "slice", "gather"}
+_SLICE_WRITES = {"dynamic-update-slice", "scatter", "scatter-add"}
+
+
+# fusion bodies containing one of these are real materialization points;
+# pure-elementwise fusions would be fused into their producers by the TPU
+# backend and are charged at output size only (the write). This models the
+# TPU fusion behavior on top of the CPU-lowered HLO, which fuses far less.
+_HEAVY_BODY = {"dot", "convolution", "reduce", "scatter",
+               "dynamic-update-slice", "dynamic-slice", "gather", "sort",
+               "concatenate", "reduce-window", "select-and-scatter"}
+
+
+_LAYOUT_OPS = {"convert", "bitcast", "copy", "transpose", "reshape"}
+
+
+def _is_layout_fusion(ins: HloInstr, mod: "HloModule") -> bool:
+    """A fusion that only converts/copies/transposes: a CPU-backend
+    artifact (the CPU dot emitter upcasts bf16 operands to f32); the TPU
+    backend fuses these into the consuming dot. Charged zero."""
+    m = _CALLS.search(ins.attrs)
+    body = mod.computations.get(m.group(1)) if m else None
+    if body is None:
+        return False
+    ops = {bi.opcode for bi in body.instrs} - {"parameter", "constant"}
+    return bool(ops) and ops <= _LAYOUT_OPS
+
+
+def _source_bytes(comp: HloComputation, name: str, mod: "HloModule",
+                  depth: int = 0) -> int:
+    """Smallest byte size along the layout/convert chain producing
+    ``name`` (the size the TPU dot would actually read)."""
+    d = comp.by_name.get(name)
+    if d is None or depth > 6:
+        return 0
+    size = d.out_bytes
+    if d.opcode in _LAYOUT_OPS and d.operands:
+        return min(size, _source_bytes(comp, d.operands[0], mod, depth + 1))
+    if d.opcode == "fusion" and _is_layout_fusion(d, mod) and d.operands:
+        return min(size, _source_bytes(comp, d.operands[0], mod, depth + 1))
+    return size
+
+
+def _instr_bytes(comp: HloComputation, ins: HloInstr,
+                 mod: "HloModule") -> float:
+    op = ins.opcode
+    if op in ("dot", "convolution"):
+        b = sum(_source_bytes(comp, o, mod) for o in ins.operands)
+        return b + ins.out_bytes
+    if op in _SLICE_READS:
+        return 2.0 * ins.out_bytes           # read slice + write out
+    if op in _SLICE_WRITES:
+        upd = 0
+        if len(ins.operands) >= 2:
+            d = comp.by_name.get(ins.operands[1])
+            if d is not None:
+                upd = d.out_bytes
+        return 2.0 * upd                     # in-place region read+write
+    if op == "fusion":
+        if _is_layout_fusion(ins, mod):
+            return 0.0                       # fused into consumer on TPU
+        return _fusion_bytes(comp, ins, mod)
+    if op in ("transpose", "broadcast", "iota", "convert", "reshape",
+              "copy"):
+        return 0.0                           # fused into consumer on TPU
+    return comp.operand_bytes(ins) + ins.out_bytes
+
+
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose",
+                "get-tuple-element", "tuple"}
+
+
+def _fusion_bytes(comp: HloComputation, ins: HloInstr,
+                  mod: "HloModule") -> float:
+    """Fusion traffic with slice-awareness: a fusion parameter whose only
+    body uses are slice-reads (or as the in-place target of a
+    dynamic-update-slice) is charged at slice granularity; a fusion whose
+    root (through converts/bitcasts) is a dynamic-update-slice writes only
+    the update region (XLA aliases the big operand in place)."""
+    m = _CALLS.search(ins.attrs)
+    body = mod.computations.get(m.group(1)) if m else None
+    if body is None:
+        return comp.operand_bytes(ins) + ins.out_bytes
+    if not any(bi.opcode in _HEAVY_BODY for bi in body.instrs):
+        return ins.out_bytes                 # elementwise: write only
+    # aliased DUS targets: trace DUS operand 0 back through passthrough
+    # ops to a parameter (XLA updates that buffer in place)
+    dus_targets: dict[str, int] = {}   # param name -> update bytes
+    for bi in body.instrs:
+        if bi.opcode == "dynamic-update-slice" and bi.operands:
+            upd = 0
+            if len(bi.operands) >= 2:
+                d2 = body.by_name.get(bi.operands[1])
+                if d2 is not None:
+                    upd = d2.out_bytes
+            tgt = body.by_name.get(bi.operands[0])
+            hops = 0
+            while (tgt is not None and tgt.opcode in _PASSTHROUGH
+                   and tgt.operands and hops < 8):
+                tgt = body.by_name.get(tgt.operands[0])
+                hops += 1
+            if tgt is not None and tgt.opcode == "parameter":
+                dus_targets[tgt.name] = max(dus_targets.get(tgt.name, 0),
+                                            upd)
+    param_names = {}
+    consumers: dict[str, list] = {}   # value name -> consumer instrs
+    for bi in body.instrs:
+        if bi.opcode == "parameter":
+            idx = int(bi.operands[0]) if (bi.operands and
+                                          bi.operands[0].isdigit()) else None
+            param_names[bi.name] = idx
+        for o in bi.operands:
+            consumers.setdefault(o, []).append(bi)
+
+    def terminal_uses(name: str, depth: int = 0):
+        """Non-passthrough consumers reachable through passthrough chains."""
+        out = []
+        if depth > 8:
+            return out
+        for c in consumers.get(name, []):
+            if c.opcode in _PASSTHROUGH:
+                out.extend(terminal_uses(c.name, depth + 1))
+            else:
+                out.append(c)
+        return out
+
+    total = 0.0
+    for pname, idx in param_names.items():
+        if idx is None or idx >= len(ins.operands):
+            continue
+        d = comp.by_name.get(ins.operands[idx])
+        size = d.out_bytes if d is not None else 0
+        term = terminal_uses(pname)
+        if pname in dus_targets:
+            size = min(size, 2 * dus_targets[pname])
+        elif term and all(t.opcode in _SLICE_READS for t in term):
+            sl = max((t.out_bytes for t in term), default=size)
+            size = min(size, sl)
+        total += size
+    # trace root through passthrough ops to detect in-place slice writes
+    root = next((bi for bi in body.instrs if bi.is_root), None)
+    seen = 0
+    while (root is not None and root.opcode in _PASSTHROUGH
+           and root.operands and seen < 8):
+        root = body.by_name.get(root.operands[0])
+        seen += 1
+    if root is not None and root.opcode in _SLICE_WRITES:
+        upd = 0
+        if len(root.operands) >= 2:
+            d2 = body.by_name.get(root.operands[1])
+            if d2 is not None:
+                upd = d2.out_bytes
+        total += 2.0 * upd                   # in-place region write
+    else:
+        total += ins.out_bytes
+    return total
+
+
+def analyze(text: str) -> HloCosts:
+    mod = parse_hlo(text)
+    costs = HloCosts()
+    costs.collective_bytes = {c: 0.0 for c in COLLECTIVES}
+    for name, comp in mod.computations.items():
+        m = mod.multipliers.get(name, 0.0)
+        if m <= 0:
+            continue
+        is_fusion_body = name in mod.fusion_bodies
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "convolution"):
+                f = dot_flops(comp, ins)
+                costs.flops += m * f
+                costs.unscaled_flops += f
+                costs.dots += 1
+            if is_fusion_body:
+                continue  # bytes accounted at the fusion call site
+            if ins.opcode in COLLECTIVES:
+                costs.collective_bytes[ins.opcode] += \
+                    m * comp.operand_bytes(ins)
+            if ins.opcode in MEMORY_OPS:
+                costs.memory_bytes += m * _instr_bytes(comp, ins, mod)
+    return costs

@@ -1,0 +1,209 @@
+"""NPU power-management ISA extension + VLIW timeline executor (paper §4.2).
+
+``setpm`` (set power mode) — paper Fig 14:
+  * variant 1 (SRAM): ``setpm %start, %end, sram, <mode>`` — gates a
+    contiguous address range, per 4 KB segment;
+  * variants 2/3 (FUs): ``setpm <fu_bitmap>, <sa|vu|hbm|ici>, <mode>`` —
+    the bitmap (register or immediate) selects multiple units at once so a
+    single misc-slot instruction reconfigures several FUs in one cycle.
+
+The cycle-level executor reproduces the paper's Fig 15 example: it tracks
+per-FU power state, enforces the "power-gated component is a structural
+hazard" rule (instructions stall until the unit is READY), and accounts
+static energy per cycle per state. Used by the microbenchmarks and the
+property tests; workload-scale energy uses the op-level engine in
+``repro.core.policies``.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+from repro.core.hw import NPUSpec, get_npu
+
+
+class PMode(enum.Enum):
+    AUTO = "auto"
+    ON = "on"
+    OFF = "off"
+    SLEEP = "sleep"  # SRAM only
+
+
+@dataclass(frozen=True)
+class Instr:
+    """One VLIW slot operation."""
+    opcode: str               # push | pop | vadd | vmul | dma | sync | setpm
+    unit: str                 # "sa0".."vu3" | "dma" | "ici" | "misc"
+    latency: int = 1
+    # setpm fields (paper Fig 14)
+    pm_fu_type: Optional[str] = None    # sa | vu | sram | hbm | ici
+    pm_bitmap: int = 0                  # which FU instances
+    pm_mode: Optional[PMode] = None
+    pm_range: Optional[tuple[int, int]] = None  # sram [start, end) bytes
+
+
+def setpm(fu_type: str, bitmap: int, mode: PMode,
+          sram_range: Optional[tuple[int, int]] = None) -> Instr:
+    return Instr("setpm", "misc", 1, pm_fu_type=fu_type, pm_bitmap=bitmap,
+                 pm_mode=mode, pm_range=sram_range)
+
+
+@dataclass
+class FUState:
+    kind: str            # sa | vu
+    powered: bool = True
+    mode: PMode = PMode.AUTO
+    ready_at: int = 0    # cycle when wake-up completes
+    busy_until: int = 0
+    idle_since: int = 0
+    on_cycles: int = 0
+    gated_cycles: int = 0
+    wake_events: int = 0
+
+
+@dataclass
+class ExecResult:
+    cycles: int
+    fu_on_cycles: dict[str, int]
+    fu_gated_cycles: dict[str, int]
+    stall_cycles: int
+    setpm_executed: int
+    wake_events: dict[str, int]
+
+    def static_energy_units(self, leak_off: float = 0.03) -> float:
+        """Static energy in (power-unit x cycles), one unit per FU."""
+        e = 0.0
+        for k in self.fu_on_cycles:
+            e += self.fu_on_cycles[k] + leak_off * self.fu_gated_cycles[k]
+        return e
+
+
+class VLIWTimeline:
+    """Executes a bundle list. Each cycle may issue one bundle (a dict
+    unit->Instr, plus at most one misc-slot setpm)."""
+
+    def __init__(self, npu: NPUSpec | str = "NPU-D", n_sa: int = 2,
+                 n_vu: int = 2, hw_auto_gating: bool = True):
+        self.npu = get_npu(npu) if isinstance(npu, str) else npu
+        self.fus: dict[str, FUState] = {}
+        for i in range(n_sa):
+            self.fus[f"sa{i}"] = FUState("sa")
+        for i in range(n_vu):
+            self.fus[f"vu{i}"] = FUState("vu")
+        self.hw_auto = hw_auto_gating
+        self.g = self.npu.gating
+
+    def _delay(self, kind: str) -> int:
+        return self.g.on_off_delay["sa_full" if kind == "sa" else "vu"]
+
+    def _window(self, kind: str) -> int:
+        key = "sa_full" if kind == "sa" else "vu"
+        return max(8, int(self.g.bet[key] * self.g.detection_window_frac))
+
+    def run(self, bundles: Iterable[dict[str, Instr]]) -> ExecResult:
+        t = 0
+        stalls = 0
+        n_setpm = 0
+        for bundle in bundles:
+            # 1) apply setpm from the misc slot (takes effect this cycle)
+            m = bundle.get("misc")
+            if m is not None and m.opcode == "setpm":
+                n_setpm += 1
+                for name, fu in self.fus.items():
+                    if fu.kind != m.pm_fu_type:
+                        continue
+                    idx = int(name[2:])
+                    if not (m.pm_bitmap >> idx) & 1:
+                        continue
+                    fu.mode = m.pm_mode
+                    if m.pm_mode == PMode.OFF:
+                        fu.powered = False
+                    elif m.pm_mode == PMode.ON and not fu.powered:
+                        fu.powered = True
+                        fu.ready_at = t + self._delay(fu.kind)
+                        fu.wake_events += 1
+
+            # 2) structural hazards: wait for every referenced unit
+            need = [i for u, i in bundle.items() if u != "misc"]
+            start = t
+            for ins in need:
+                fu = self.fus.get(ins.unit)
+                if fu is None:
+                    continue
+                if not fu.powered:  # auto-wake on dispatch
+                    if fu.mode == PMode.OFF:
+                        # sw said OFF: dispatch overrides (hazard + wake)
+                        pass
+                    fu.powered = True
+                    fu.ready_at = max(t, fu.busy_until) + self._delay(fu.kind)
+                    fu.wake_events += 1
+                start = max(start, fu.ready_at, fu.busy_until)
+            stalls += start - t
+
+            # 3) issue
+            for ins in need:
+                fu = self.fus.get(ins.unit)
+                if fu is None:
+                    continue
+                fu.busy_until = start + ins.latency
+                fu.idle_since = fu.busy_until
+            t = start + 1
+
+            # 4) hardware auto idle-detection gating
+            if self.hw_auto:
+                for fu in self.fus.values():
+                    if (fu.powered and fu.mode == PMode.AUTO
+                            and t - fu.idle_since >= self._window(fu.kind)
+                            and fu.busy_until <= t):
+                        fu.powered = False
+
+            # 5) accounting
+            for fu in self.fus.values():
+                if fu.powered:
+                    fu.on_cycles += 1
+                else:
+                    fu.gated_cycles += 1
+
+        end = max([t] + [f.busy_until for f in self.fus.values()])
+        for fu in self.fus.values():  # drain accounting
+            extra = end - t
+            if fu.powered:
+                fu.on_cycles += extra
+            else:
+                fu.gated_cycles += extra
+        return ExecResult(
+            cycles=end,
+            fu_on_cycles={k: f.on_cycles for k, f in self.fus.items()},
+            fu_gated_cycles={k: f.gated_cycles for k, f in self.fus.items()},
+            stall_cycles=stalls,
+            setpm_executed=n_setpm,
+            wake_events={k: f.wake_events for k, f in self.fus.items()},
+        )
+
+
+def fig15_program(n_periods: int = 4, *, with_setpm: bool,
+                  push_cycles: int = 8, vadd_cycles: int = 1,
+                  n_sa: int = 2, n_vu: int = 2) -> list[dict[str, Instr]]:
+    """The paper's Fig 15 pattern: 2 SAs push for 8 cycles each (staggered),
+    VUs post-process for ~2 cycles out of every 16; the compiler setpm-gates
+    the VUs in the 10-cycle holes."""
+    bundles: list[dict[str, Instr]] = []
+    vu_mask = (1 << n_vu) - 1
+    for p in range(n_periods):
+        for i in range(push_cycles):
+            b: dict[str, Instr] = {
+                "sa0": Instr("push", "sa0", 1),
+            }
+            if i == 0 and with_setpm and p > 0:
+                b["misc"] = setpm("vu", vu_mask, PMode.ON)  # pre-wake
+            bundles.append(b)
+        for i in range(push_cycles):
+            b = {"sa1": Instr("push", "sa1", 1)}
+            if i < 2:  # VUs consume the SA0 outputs
+                b[f"vu{i % n_vu}"] = Instr("vadd", f"vu{i % n_vu}",
+                                           vadd_cycles)
+            if i == 2 and with_setpm:
+                b["misc"] = setpm("vu", vu_mask, PMode.OFF)
+            bundles.append(b)
+    return bundles

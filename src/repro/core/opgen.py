@@ -1,0 +1,382 @@
+"""Operator-trace generator — the simulator frontend (paper §4.4).
+
+Lowers a workload description (the paper's Table 1 suite, or one of our
+assigned architecture configs x input shapes) into a per-operator trace:
+SA/VU FLOPs, HBM/ICI bytes, SRAM tile demand, and matmul dims for the SA
+spatial-gating model. The backend (``repro.core.policies``) turns the trace
+into per-component times and energies under each power-gating design.
+
+The same role as the paper artifact's ``llm_ops_generator``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class Op:
+    name: str
+    flops_sa: float = 0.0          # MXU-mapped FLOPs
+    flops_vu: float = 0.0          # vector FLOPs
+    bytes_hbm: float = 0.0
+    bytes_ici: float = 0.0
+    sram_demand: int = 0           # resident bytes needed (tile working set)
+    matmul_dims: Optional[tuple[int, int, int]] = None  # (M, K, N) per SA op
+    count: int = 1                 # consecutive repetitions (e.g. layers)
+    collective: bool = False       # uses ICI
+
+    def scaled(self, n: int) -> "Op":
+        return replace(self, count=self.count * n)
+
+
+@dataclass(frozen=True)
+class Workload:
+    name: str
+    kind: str                      # train | prefill | decode
+    ops: tuple[Op, ...]
+    n_chips: int = 1
+    note: str = ""
+
+    def total(self, attr: str) -> float:
+        return sum(getattr(o, attr) * o.count for o in self.ops)
+
+
+# --------------------------------------------------------------------------
+# Helpers
+# --------------------------------------------------------------------------
+
+BF16 = 2
+F32 = 4
+
+
+def _matmul(name, M, K, N, *, bytes_w=BF16, bytes_act=BF16, n_chips=1,
+            count=1, sram_tile=None, reread=1.0) -> Op:
+    """A [M,K]x[K,N] matmul; weights + activations stream from HBM.
+
+    SRAM demand follows the paper's Fig 7 methodology: the minimum tile
+    size that maximizes on-chip reuse. Compute-bound shapes (large M) want
+    the weight tile resident plus double-buffered activations; memory-bound
+    shapes (small M — decode GEMVs) gain nothing from large tiles and only
+    need enough to hide HBM latency.
+    """
+    flops = 2.0 * M * K * N
+    b = (K * N * bytes_w + M * K * bytes_act * reread + M * N * bytes_act)
+    if sram_tile is None:
+        if M >= 512:  # compute-bound: weight-stationary large tiles
+            sram_tile = min(int(0.75 * 128 * 2 ** 20),
+                            K * N * bytes_w + 2 * 512 * K * bytes_act
+                            + 512 * N * F32)
+        else:  # streaming: latency-hiding double buffers only
+            sram_tile = min(8 << 20, b)
+    # VU post-processes SA outputs (accumulate/cast/activation): fine-
+    # grained interleaved work, 1 VU-op per output element (paper Fig 15)
+    return Op(name, flops_sa=flops / n_chips,
+              flops_vu=M * N * 2.0 / n_chips,
+              bytes_hbm=b / n_chips,
+              sram_demand=int(sram_tile), matmul_dims=(M, K, N),
+              count=count)
+
+
+def _vector(name, elems, flops_per_elem=2.0, bytes_per_elem=2 * BF16,
+            n_chips=1, count=1, sram_tile=4 << 20) -> Op:
+    return Op(name, flops_vu=elems * flops_per_elem / n_chips,
+              bytes_hbm=elems * bytes_per_elem / n_chips,
+              sram_demand=sram_tile, count=count)
+
+
+def _collective(name, bytes_per_chip, count=1, sram_tile=8 << 20) -> Op:
+    return Op(name, bytes_ici=bytes_per_chip, count=count,
+              sram_demand=sram_tile, collective=True)
+
+
+# --------------------------------------------------------------------------
+# Paper Table 1 workloads (LLM train/prefill/decode, DLRM, diffusion)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LLMCfg:
+    name: str
+    L: int
+    d: int
+    H: int
+    Hkv: int
+    ff: int
+    vocab: int
+
+
+LLAMA = {
+    "llama3-8b": LLMCfg("llama3-8b", 32, 4096, 32, 8, 14336, 128256),
+    "llama2-13b": LLMCfg("llama2-13b", 40, 5120, 40, 40, 13824, 32000),
+    "llama3-70b": LLMCfg("llama3-70b", 80, 8192, 64, 8, 28672, 128256),
+    "llama3.1-405b": LLMCfg("llama3.1-405b", 126, 16384, 128, 8, 53248,
+                            128256),
+}
+
+
+def llm_layer_ops(c: LLMCfg, T: int, *, n_chips: int, kv_len: int,
+                  decode: bool, tp: int) -> list[Op]:
+    """One transformer layer processing T tokens (per-chip amounts).
+
+    tp: tensor-parallel ways (weights divided; activations all-reduced).
+    """
+    hd = c.d // c.H
+    ops: list[Op] = []
+    kv_dim = c.Hkv * hd
+    # qkv + out projections (weights sharded tp-ways)
+    ops.append(_matmul("qkv_proj", T, c.d, (c.d + 2 * kv_dim) // tp))
+    if decode:
+        # attention against KV cache: small M -> mapped to VU when tiny
+        att_flops = 2.0 * T * kv_len * hd * c.H / tp * 2
+        ops.append(Op("attn_decode", flops_vu=att_flops,
+                      bytes_hbm=kv_len * kv_dim * BF16 * 2 / tp * max(1, T // 8),
+                      sram_demand=8 << 20))
+    else:
+        # flash attention, scores+av on the SA
+        att = 2.0 * T * kv_len * hd * 2 * (c.H / tp)
+        ops.append(Op("attention", flops_sa=att,
+                      bytes_hbm=3 * T * c.d * BF16 / tp,
+                      matmul_dims=(T, hd, kv_len), sram_demand=24 << 20))
+    ops.append(_matmul("out_proj", T, c.d // tp, c.d))
+    ops.append(_collective("ar_attn", 2 * T * c.d * BF16 * (tp - 1) / tp)
+               if tp > 1 else _vector("residual1", T * c.d))
+    ops.append(_vector("rmsnorm1", T * c.d, flops_per_elem=4))
+    ops.append(_matmul("mlp_up", T, c.d, 2 * c.ff // tp))
+    ops.append(_vector("swiglu", T * c.ff / tp, flops_per_elem=3,
+                       bytes_per_elem=0.5))
+    ops.append(_matmul("mlp_down", T, c.ff // tp, c.d))
+    ops.append(_collective("ar_mlp", 2 * T * c.d * BF16 * (tp - 1) / tp)
+               if tp > 1 else _vector("residual2", T * c.d))
+    ops.append(_vector("rmsnorm2", T * c.d, flops_per_elem=4))
+    return ops
+
+
+def llm_workload(model: str, phase: str, *, batch: int, seq: int = 4096,
+                 out_seq: int = 512, n_chips: int = 1, tp: int = 1,
+                 dp: int = 1) -> Workload:
+    c = LLAMA[model]
+    ops: list[Op] = []
+    if phase == "train":
+        T = batch * seq // dp
+        layer = llm_layer_ops(c, T, n_chips=n_chips, kv_len=seq,
+                              decode=False, tp=tp)
+        # fwd + bwd (2x matmuls in bwd), layer sequences interleaved so the
+        # per-component idle-gap structure matches real execution order
+        ops += list(layer) * c.L
+        bwd = [replace(o, name=o.name + "_bwd",
+                       flops_sa=o.flops_sa * 2, flops_vu=o.flops_vu * 2,
+                       bytes_hbm=o.bytes_hbm * 2) for o in layer]
+        ops += list(bwd) * c.L
+        ops.append(_matmul("lm_head", T, c.d, c.vocab // tp))
+        n_params = c.L * (c.d * (c.d + 2 * c.Hkv * (c.d // c.H))
+                          + c.d * c.d + 3 * c.d * c.ff) + c.d * c.vocab
+        ops.append(_collective("grad_allreduce",
+                               2 * n_params / (tp * dp) * BF16))
+        ops.append(_vector("adam_update", n_params / (tp * dp),
+                           flops_per_elem=12, bytes_per_elem=16))
+    elif phase == "prefill":
+        T = batch * seq
+        layer = llm_layer_ops(c, T, n_chips=n_chips, kv_len=seq,
+                              decode=False, tp=tp)
+        ops += list(layer) * c.L
+        ops.append(_matmul("lm_head", batch, c.d, c.vocab // tp))
+    else:  # decode
+        T = batch
+        layer = llm_layer_ops(c, T, n_chips=n_chips, kv_len=seq + out_seq // 2,
+                              decode=True, tp=tp)
+        ops += list(layer) * c.L
+        ops.append(_matmul("lm_head", T, c.d, c.vocab // tp))
+    return Workload(f"{model}-{phase}", phase, tuple(ops), n_chips=n_chips)
+
+
+def dlrm_workload(size: str, *, batch: int = 1024, n_chips: int = 8) \
+        -> Workload:
+    """DLRM: embedding-gather bound + small MLPs (paper: S/M/L tables)."""
+    table_gb = {"S": 20, "M": 45, "L": 98}[size]
+    n_tables, emb_dim = 64, 128
+    lookups = 80
+    bottom = [512, 256, 128]
+    top = [1024, 1024, 512, 256, 1]
+    ops: list[Op] = []
+    # embedding gathers: HBM-random-access bound, tiny SRAM demand
+    gather_bytes = batch * n_tables * lookups * emb_dim * F32 / n_chips
+    ops.append(Op("emb_gather", bytes_hbm=gather_bytes,
+                  flops_vu=batch * n_tables * lookups * emb_dim / n_chips,
+                  sram_demand=4 << 20))
+    # all-to-all to exchange embedding shards (model-parallel tables)
+    ops.append(_collective("emb_alltoall",
+                           batch * n_tables * emb_dim * F32 / n_chips,
+                           sram_tile=4 << 20))
+    prev = 13
+    for i, w in enumerate(bottom):
+        ops.append(_matmul(f"bot_mlp{i}", batch, prev, w, sram_tile=2 << 20))
+        prev = w
+    inter = n_tables + 1
+    ops.append(_vector("interaction", batch * inter * inter * emb_dim / 64,
+                       sram_tile=2 << 20))
+    prev = inter * (inter - 1) // 2 + 128
+    for i, w in enumerate(top):
+        ops.append(_matmul(f"top_mlp{i}", batch, prev, w, sram_tile=2 << 20))
+        prev = w
+    return Workload(f"dlrm-{size}", "decode", tuple(ops), n_chips=n_chips,
+                    note=f"tables={table_gb}GB")
+
+
+def diffusion_workload(model: str, *, batch: int = 8, n_chips: int = 4) \
+        -> Workload:
+    ops: list[Op] = []
+    if model == "dit-xl":
+        L, d, H, ff, T = 28, 1152, 16, 4608, 1024
+        hd = 72  # paper: head size 72 < SA width 128 -> spatial underuse
+        steps = 4  # denoising steps folded into op counts
+        Tb = T * batch
+        for _ in range(1):
+            layer = [
+                _matmul("qkv", Tb, d, 3 * d),
+                Op("attention", flops_sa=2.0 * Tb * T * hd * 2 * H,
+                   bytes_hbm=3 * Tb * d * BF16,
+                   matmul_dims=(Tb, hd, T), sram_demand=16 << 20),
+                _matmul("proj", Tb, d, d),
+                _vector("adaln", Tb * d, flops_per_elem=6),
+                _matmul("mlp1", Tb, d, ff),
+                _vector("gelu", Tb * ff, flops_per_elem=4, bytes_per_elem=0),
+                _matmul("mlp2", Tb, ff, d),
+            ]
+            ops += [o.scaled(L * steps) for o in layer]
+    else:  # gligen (U-Net): conv stages with shrinking spatial dims
+        steps = 4
+        res, ch = 64, 320
+        for stage in range(4):
+            r = res >> stage
+            c_in = ch * (2 ** min(stage, 2))
+            T = r * r * batch
+            # conv as implicit GEMM: M=T, K=9*c_in, N=c_out
+            ops.append(_matmul(f"conv{stage}", T, 9 * c_in, c_in,
+                               count=6 * steps))
+            if stage >= 1:  # attention blocks at lower res; head dim shrinks
+                hd = max(40, 160 >> stage)
+                ops.append(Op(f"attn{stage}",
+                              flops_sa=2.0 * T * T / batch * hd * 2 * 8,
+                              bytes_hbm=3 * T * c_in * BF16,
+                              matmul_dims=(T, hd, T // batch),
+                              sram_demand=16 << 20, count=2 * steps))
+            ops.append(_vector(f"groupnorm{stage}", T * c_in,
+                               flops_per_elem=6, count=6 * steps))
+    return Workload(model, "prefill", tuple(ops), n_chips=n_chips)
+
+
+# --------------------------------------------------------------------------
+# Assigned-architecture workloads (execution plane -> power plane bridge)
+# --------------------------------------------------------------------------
+
+def arch_workload(cfg: ArchConfig, shape: ShapeConfig, *, n_chips: int = 256,
+                  tp: int = 16) -> Workload:
+    """Analytic operator trace for one of our (arch x shape) cells.
+
+    Used when HLO statistics are not available (and cross-checked against
+    the dry-run numbers in the benchmarks).
+    """
+    ops: list[Op] = []
+    decode = shape.kind == "decode"
+    B, S = shape.global_batch, shape.seq_len
+    dp = max(1, n_chips // tp)
+    T = (B if decode else B * S) // dp
+    T = max(1, T)
+    D = cfg.d_model
+    kv_len = S
+    train = shape.kind == "train"
+
+    def add_layer(ops_layer, L):
+        mult = 3 if train else 1  # fwd + 2x bwd
+        seq_ops = [replace(o, flops_sa=o.flops_sa * mult,
+                           flops_vu=o.flops_vu * mult,
+                           bytes_hbm=o.bytes_hbm * mult)
+                   for o in ops_layer]
+        ops.extend(seq_ops * L)
+
+    if cfg.family == "ssm":
+        ss = cfg.ssm
+        di = ss.d_inner(D)
+        nh = ss.n_heads(D)
+        layer = [
+            _matmul("in_proj", T, D, 2 * di // tp),
+            _vector("conv+act", T * di / tp, flops_per_elem=10),
+            Op("ssd", flops_vu=T * nh * ss.head_dim * ss.d_state * 6 / tp,
+               flops_sa=(0 if decode else
+                         2.0 * T * ss.chunk * ss.head_dim * nh * 2 / tp),
+               bytes_hbm=T * di * BF16 * 3 / tp,
+               matmul_dims=None if decode else (T, ss.head_dim, ss.chunk),
+               sram_demand=16 << 20),
+            _matmul("out_proj", T, di // tp, D),
+        ]
+        add_layer(layer, cfg.n_layers)
+    else:
+        H = max(1, cfg.n_heads)
+        hd = max(1, cfg.head_dim)
+        layer = [
+            _matmul("qkv", T, D, (H + 2 * cfg.n_kv_heads) * hd // tp)]
+        if decode:
+            layer.append(Op(
+                "attn_decode",
+                flops_vu=2.0 * T * kv_len * hd * 2 * H / tp,
+                bytes_hbm=kv_len * cfg.n_kv_heads * hd * BF16 * 2
+                * max(1, T // 8) / tp,
+                sram_demand=8 << 20))
+        else:
+            layer.append(Op(
+                "attention", flops_sa=2.0 * T * kv_len * hd * 2 * H / tp,
+                bytes_hbm=3 * T * D * BF16 / tp,
+                matmul_dims=(T, hd, kv_len), sram_demand=24 << 20))
+        layer.append(_matmul("out_proj", T, H * hd // tp, D))
+        if cfg.moe:
+            mo = cfg.moe
+            layer.append(_collective(
+                "moe_a2a", 2 * T * D * BF16 * (tp - 1) / tp, sram_tile=8 << 20))
+            layer.append(_matmul("experts", T * mo.top_k, D,
+                                 3 * mo.d_ff_expert))
+        elif cfg.d_ff:
+            layer.append(_matmul("mlp_up", T, D, 2 * cfg.d_ff // tp))
+            layer.append(_matmul("mlp_down", T, cfg.d_ff // tp, D))
+        if tp > 1:
+            layer.append(_collective("ar_layer",
+                                     2 * T * D * BF16 * (tp - 1) / tp))
+        layer.append(_vector("norms", T * D, flops_per_elem=8))
+        add_layer(layer, cfg.n_layers)
+
+    ops.append(_matmul("lm_head", T if not train else T,
+                       D, cfg.vocab_padded // tp))
+    if train:
+        from repro.models.registry import count_params
+        n_params = count_params(cfg)
+        ops.append(_collective("grad_allreduce",
+                               2 * n_params * BF16 / (tp * dp)))
+        ops.append(_vector("adam", n_params / (tp * dp), flops_per_elem=12,
+                           bytes_per_elem=16))
+    return Workload(f"{cfg.name}-{shape.name}", shape.kind, tuple(ops),
+                    n_chips=n_chips)
+
+
+# --------------------------------------------------------------------------
+# The paper's benchmark suite (Table 1 / Table 4 -like configs on NPU-D)
+# --------------------------------------------------------------------------
+
+def paper_suite() -> list[Workload]:
+    return [
+        llm_workload("llama3-8b", "train", batch=32, n_chips=4, tp=4),
+        llm_workload("llama2-13b", "train", batch=32, n_chips=4, tp=4),
+        llm_workload("llama3-70b", "train", batch=32, n_chips=8, tp=8),
+        llm_workload("llama3.1-405b", "train", batch=32, n_chips=16, tp=16),
+        llm_workload("llama3-8b", "prefill", batch=4, n_chips=1),
+        llm_workload("llama2-13b", "prefill", batch=4, n_chips=1),
+        llm_workload("llama3-70b", "prefill", batch=8, n_chips=4, tp=4),
+        llm_workload("llama3.1-405b", "prefill", batch=8, n_chips=8, tp=8),
+        llm_workload("llama3-8b", "decode", batch=8, n_chips=1),
+        llm_workload("llama2-13b", "decode", batch=4, n_chips=1),
+        llm_workload("llama3-70b", "decode", batch=32, n_chips=4, tp=4),
+        llm_workload("llama3.1-405b", "decode", batch=64, n_chips=8, tp=8),
+        dlrm_workload("S"), dlrm_workload("M"), dlrm_workload("L"),
+        diffusion_workload("dit-xl"), diffusion_workload("gligen"),
+    ]

@@ -1,0 +1,192 @@
+"""Compiler passes for software-managed power gating (paper §4.3).
+
+Runs after instruction scheduling and SRAM allocation:
+
+* ``analyze_vu_idleness``  — distances (cycles) between consecutive
+  instructions in each VU slot; a DMA between two VU instructions makes the
+  distance effectively infinite (HBM latency >> VU BET).
+* ``analyze_sram_lifetimes`` — per-4KB-segment idle intervals from buffer
+  (start, end, addr, size) lifetimes out of the allocator.
+* ``instrument_setpm`` — BET-based policy: gate an interval iff it is
+  longer than BET *and* longer than 2x the on/off delay; insert
+  ``setpm off`` at interval start and ``setpm on`` ``delay`` cycles before
+  the next use so the wake-up is hidden.
+
+Both passes are linear in program length (paper §4.4).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu
+from repro.core.isa import Instr, PMode, setpm
+
+INF = float("inf")
+
+
+@dataclass(frozen=True)
+class SlotUse:
+    """One scheduled use of a functional-unit slot."""
+    cycle: int
+    unit: str          # e.g. "vu0"
+    opcode: str = "op"
+    duration: int = 1
+
+
+@dataclass(frozen=True)
+class IdleInterval:
+    unit: str
+    start: int         # first idle cycle
+    end: float         # first busy cycle again (inf = never)
+
+    @property
+    def length(self) -> float:
+        return self.end - self.start
+
+
+def analyze_vu_idleness(uses: list[SlotUse],
+                        dma_cycles: Optional[list[int]] = None,
+                        horizon: Optional[int] = None) \
+        -> dict[str, list[IdleInterval]]:
+    """Idle intervals per VU slot. ``dma_cycles``: cycles at which a DMA
+    issues — an interval containing one is treated as unbounded (the DMA
+    latency dominates)."""
+    dma_cycles = sorted(dma_cycles or [])
+    by_unit: dict[str, list[SlotUse]] = {}
+    for u in sorted(uses, key=lambda s: s.cycle):
+        by_unit.setdefault(u.unit, []).append(u)
+    out: dict[str, list[IdleInterval]] = {}
+    for unit, us in by_unit.items():
+        ivs = []
+        for a, b in zip(us, us[1:]):
+            start = a.cycle + a.duration
+            end: float = b.cycle
+            if end <= start:
+                continue
+            if any(start <= d < end for d in dma_cycles):
+                end = INF if horizon is None else max(end, horizon)
+                ivs.append(IdleInterval(unit, start, b.cycle))
+                continue
+            ivs.append(IdleInterval(unit, start, end))
+        if horizon is not None and us:
+            tail = us[-1].cycle + us[-1].duration
+            if horizon > tail:
+                ivs.append(IdleInterval(unit, tail, horizon))
+        out[unit] = ivs
+    return out
+
+
+@dataclass(frozen=True)
+class BufferLifetime:
+    """Output of the SRAM allocation pass for one buffer."""
+    start_cycle: int
+    end_cycle: int
+    addr: int
+    size: int
+
+
+def analyze_sram_lifetimes(bufs: list[BufferLifetime], sram_bytes: int,
+                           horizon: int) -> list[tuple[int, list]]:
+    """Per-segment busy intervals -> [(segment_index, [(start, end), ...])].
+    Segments with no buffer at all have an empty list (always idle)."""
+    n_seg = sram_bytes // SRAM_SEGMENT_BYTES
+    seg_busy: list[list[tuple[int, int]]] = [[] for _ in range(n_seg)]
+    for b in bufs:
+        s0 = b.addr // SRAM_SEGMENT_BYTES
+        s1 = (b.addr + b.size - 1) // SRAM_SEGMENT_BYTES
+        for s in range(s0, min(s1 + 1, n_seg)):
+            seg_busy[s].append((b.start_cycle, b.end_cycle))
+    out = []
+    for s in range(n_seg):
+        ivs = sorted(seg_busy[s])
+        merged: list[tuple[int, int]] = []
+        for st, en in ivs:
+            if merged and st <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], en))
+            else:
+                merged.append((st, en))
+        out.append((s, merged))
+    return out
+
+
+@dataclass(frozen=True)
+class SetpmPlacement:
+    cycle: int
+    instr: Instr
+    reason: str
+
+
+def should_gate(interval_len: float, bet: int, delay: int) -> bool:
+    """Paper §4.3: gate iff idle > BET AND idle > 2x on/off delay."""
+    return interval_len > bet and interval_len > 2 * delay
+
+
+def instrument_setpm(vu_idle: dict[str, list[IdleInterval]],
+                     npu: NPUSpec | str = "NPU-D") -> list[SetpmPlacement]:
+    """BET-based setpm insertion for VUs. Adjacent VU slots gated by the
+    same interval share one setpm via the fu bitmap (paper: one misc slot
+    per cycle, bitmap amortizes)."""
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    bet = npu.gating.bet["vu"]
+    delay = npu.gating.on_off_delay["vu"]
+    # group intervals by (start, end) so one bitmap covers multiple units
+    groups: dict[tuple, int] = {}
+    for unit, ivs in vu_idle.items():
+        idx = int(unit[2:])
+        for iv in ivs:
+            if should_gate(iv.length, bet, delay):
+                key = (iv.start, iv.end)
+                groups[key] = groups.get(key, 0) | (1 << idx)
+    out = []
+    for (start, end), bitmap in sorted(groups.items()):
+        out.append(SetpmPlacement(
+            int(start), setpm("vu", bitmap, PMode.OFF),
+            f"idle {end - start:.0f} > bet {bet}"))
+        if end != INF:
+            wake_at = int(end) - delay
+            out.append(SetpmPlacement(
+                wake_at, setpm("vu", bitmap, PMode.ON),
+                "pre-wake (hidden delay)"))
+    return out
+
+
+def sram_setpm_plan(seg_intervals: list[tuple[int, list]], horizon: int,
+                    npu: NPUSpec | str = "NPU-D") -> list[SetpmPlacement]:
+    """Whole-range OFF setpm for segments never used plus gap gating for
+    segments with long dead intervals. Contiguous segment ranges collapse
+    into single range-setpm instructions (paper Fig 14 variant 1)."""
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    bet = npu.gating.bet["sram_off"]
+    delay = npu.gating.on_off_delay["sram_off"]
+    dead: list[int] = [s for s, ivs in seg_intervals if not ivs]
+    out: list[SetpmPlacement] = []
+    # collapse contiguous dead segments into ranges
+    i = 0
+    while i < len(dead):
+        j = i
+        while j + 1 < len(dead) and dead[j + 1] == dead[j] + 1:
+            j += 1
+        lo = dead[i] * SRAM_SEGMENT_BYTES
+        hi = (dead[j] + 1) * SRAM_SEGMENT_BYTES
+        out.append(SetpmPlacement(
+            0, setpm("sram", 0, PMode.OFF, (lo, hi)), "never used"))
+        i = j + 1
+    # per-segment gaps
+    for s, ivs in seg_intervals:
+        if not ivs:
+            continue
+        for (a_s, a_e), (b_s, _) in zip(ivs, ivs[1:]):
+            if should_gate(b_s - a_e, bet, delay):
+                rng = (s * SRAM_SEGMENT_BYTES, (s + 1) * SRAM_SEGMENT_BYTES)
+                out.append(SetpmPlacement(
+                    a_e, setpm("sram", 0, PMode.OFF, rng), "dead interval"))
+                out.append(SetpmPlacement(
+                    b_s - delay, setpm("sram", 0, PMode.ON, rng), "pre-wake"))
+        tail = ivs[-1][1]
+        if should_gate(horizon - tail, bet, delay):
+            rng = (s * SRAM_SEGMENT_BYTES, (s + 1) * SRAM_SEGMENT_BYTES)
+            out.append(SetpmPlacement(
+                tail, setpm("sram", 0, PMode.OFF, rng), "tail dead"))
+    return out

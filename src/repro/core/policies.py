@@ -1,0 +1,384 @@
+"""Power-gating policy engine — the simulator backend (paper §4, §6).
+
+Evaluates a Workload trace on an NPUSpec under one of five designs:
+
+* ``NoPG``        — no power gating (baseline).
+* ``ReGate-Base`` — conventional HW idle-detection at component granularity
+                    (detection window = BET/3); the SA gates as a whole;
+                    SRAM can only SLEEP (hardware can't prove a segment
+                    dead); exposed wake-up delays extend the runtime.
+* ``ReGate-HW``   — + PE-level spatial SA gating (row/col zero-weight
+                    prefix bitmaps + diagonal PE_on propagation): SA static
+                    follows ``sa_gating.gating_stats`` occupancy, exposed SA
+                    wake drops to a single PE delay.
+* ``ReGate-Full`` — + SW-managed VU & SRAM via ``setpm``: exact idle
+                    intervals (no detection window waste), wakes hidden by
+                    the compiler, unused SRAM segments fully OFF.
+* ``Ideal``       — zero leakage when gated, zero delays, every idle cycle
+                    gated (roofline).
+
+Timing model: per op, each component is active for its own service time;
+op duration = max over components (perfect overlap); ops run back-to-back.
+Idle intervals per component are the within-op slack plus whole ops where
+the component is unused, merged across op boundaries.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+from repro.core.hw import NPUSpec, get_npu
+from repro.core.opgen import Op, Workload
+from repro.core.power import COMPONENTS, PowerModel
+from repro.core.sa_gating import SAStats, gating_stats
+
+POLICIES = ("NoPG", "ReGate-Base", "ReGate-HW", "ReGate-Full", "Ideal")
+
+GATEABLE = ("sa", "vu", "sram", "hbm", "ici")
+
+
+@dataclass(frozen=True)
+class PolicyKnobs:
+    """Sensitivity-analysis overrides (paper §6.5)."""
+    leak_off_logic: Optional[float] = None
+    leak_sram_sleep: Optional[float] = None
+    leak_sram_off: Optional[float] = None
+    delay_scale: float = 1.0  # scales wake-up delays and BETs
+
+
+@dataclass
+class EnergyReport:
+    workload: str
+    policy: str
+    npu: str
+    runtime_s: float
+    static_j: dict[str, float]
+    dynamic_j: dict[str, float]
+    setpm_count: float = 0.0
+    wake_events: dict[str, float] = field(default_factory=dict)
+
+    @property
+    def total_j(self) -> float:
+        return sum(self.static_j.values()) + sum(self.dynamic_j.values())
+
+    @property
+    def avg_power_w(self) -> float:
+        return self.total_j / max(1e-12, self.runtime_s)
+
+    @property
+    def static_frac(self) -> float:
+        return sum(self.static_j.values()) / max(1e-12, self.total_j)
+
+    def setpm_per_1k_cycles(self, npu: NPUSpec) -> float:
+        return self.setpm_count / max(1.0, npu.cycles(self.runtime_s)) * 1e3
+
+
+# --------------------------------------------------------------------------
+# per-op component service times
+# --------------------------------------------------------------------------
+
+def op_times(op: Op, npu: NPUSpec) -> dict[str, float]:
+    eff = 1.0
+    stats: Optional[SAStats] = None
+    if op.flops_sa > 0 and op.matmul_dims is not None:
+        stats = gating_stats(*op.matmul_dims, npu.sa_width)
+        # achieved throughput scales with ON-PE occupancy
+        flops_cycles = op.matmul_dims[0] * op.matmul_dims[1] \
+            * op.matmul_dims[2] / (npu.sa_width ** 2)
+        eff = min(1.0, flops_cycles / max(1e-9, stats.duration_cycles))
+        eff = max(eff, 1e-3)
+    t = {
+        "sa": op.flops_sa / (npu.sa_flops * eff) if op.flops_sa else 0.0,
+        "vu": op.flops_vu / npu.vu_flops if op.flops_vu else 0.0,
+        "hbm": op.bytes_hbm / npu.hbm_bw if op.bytes_hbm else 0.0,
+        "ici": op.bytes_ici / npu.ici_bw if op.bytes_ici else 0.0,
+    }
+    dur = max(max(t.values()), 1e-12)
+    t["sram"] = dur  # SRAM serves whoever is active
+    t["other"] = dur
+    t["_dur"] = dur
+    t["_sa_eff"] = eff
+    return t
+
+
+# --------------------------------------------------------------------------
+# policy semantics per component
+# --------------------------------------------------------------------------
+
+def _gated_idle_energy(gap_s: float, p_static: float, *, mode: str,
+                       bet_s: float, delay_s: float, window_s: float,
+                       leak: float) -> tuple[float, float, float, float]:
+    """Energy spent during one idle interval of length ``gap_s``.
+
+    Returns (energy_J, exposed_wake_s, wake_events, setpm_count).
+    mode: "none" | "hw" | "sw" | "ideal".
+    """
+    if gap_s <= 0:
+        return 0.0, 0.0, 0.0, 0.0
+    if mode == "none":
+        return p_static * gap_s, 0.0, 0.0, 0.0
+    if mode == "ideal":
+        return 0.0, 0.0, 0.0, 0.0
+    if mode == "hw":
+        # observe for the detection window, then gate if still idle;
+        # next use pays the exposed wake-up delay.
+        if gap_s <= window_s:
+            return p_static * gap_s, 0.0, 0.0, 0.0
+        gated = gap_s - window_s
+        e = p_static * window_s + leak * p_static * gated \
+            + p_static * delay_s  # transition energy (on/off ramp)
+        return e, delay_s, 1.0, 0.0
+    # sw: compiler knows the interval; gate only if profitable & hideable
+    if gap_s >= max(bet_s, 2.0 * delay_s):
+        e = leak * p_static * (gap_s - 2 * delay_s) \
+            + p_static * 2 * delay_s
+        return e, 0.0, 1.0, 2.0  # setpm off + setpm on
+    return p_static * gap_s, 0.0, 0.0, 0.0
+
+
+@dataclass(frozen=True)
+class _CompPolicy:
+    mode: str          # none | hw | sw | ideal
+    delay_key: str     # key into gating tables
+    spatial_sa: bool = False
+    sram_state: str = "on"  # on | sleep | off | ideal (unused-capacity)
+
+
+def _component_policies(policy: str) -> dict[str, _CompPolicy]:
+    if policy == "NoPG":
+        return {c: _CompPolicy("none", "") for c in COMPONENTS}
+    if policy == "Ideal":
+        d = {c: _CompPolicy("ideal", "", spatial_sa=True,
+                            sram_state="ideal") for c in COMPONENTS}
+        d["other"] = _CompPolicy("none", "")
+        return d
+    base = {
+        "sa": _CompPolicy("hw", "sa_full"),
+        "vu": _CompPolicy("hw", "vu"),
+        "hbm": _CompPolicy("hw", "hbm"),
+        "ici": _CompPolicy("hw", "ici"),
+        "sram": _CompPolicy("hw", "sram_sleep", sram_state="sleep"),
+        "other": _CompPolicy("none", ""),
+    }
+    if policy == "ReGate-Base":
+        return base
+    if policy == "ReGate-HW":
+        base["sa"] = _CompPolicy("hw", "sa_pe", spatial_sa=True)
+        return base
+    if policy == "ReGate-Full":
+        base["sa"] = _CompPolicy("hw", "sa_pe", spatial_sa=True)
+        base["vu"] = _CompPolicy("sw", "vu")
+        base["sram"] = _CompPolicy("sw", "sram_off", sram_state="off")
+        return base
+    raise KeyError(policy)
+
+
+# --------------------------------------------------------------------------
+# evaluation
+# --------------------------------------------------------------------------
+
+def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
+             policy: str = "ReGate-Full",
+             knobs: PolicyKnobs = PolicyKnobs()) -> EnergyReport:
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    pm = PowerModel(npu)
+    g = npu.gating
+    cp = _component_policies(policy)
+
+    leak_logic = knobs.leak_off_logic if knobs.leak_off_logic is not None \
+        else g.leak_off_logic
+    leak_sleep = knobs.leak_sram_sleep if knobs.leak_sram_sleep is not None \
+        else g.leak_sram_sleep
+    leak_off = knobs.leak_sram_off if knobs.leak_sram_off is not None \
+        else g.leak_sram_off
+
+    def delay_s(key: str) -> float:
+        return g.on_off_delay.get(key, 0) * knobs.delay_scale / npu.freq_hz
+
+    def bet_s(key: str) -> float:
+        return g.bet.get(key, 0) * knobs.delay_scale / npu.freq_hz
+
+    static_w = pm.static_w
+    dyn_w = pm.dyn_max_w
+
+    static_j = {c: 0.0 for c in COMPONENTS}
+    dynamic_j = {c: 0.0 for c in COMPONENTS}
+    runtime = 0.0
+    overhead = 0.0
+    setpm = 0.0
+    wakes = {c: 0.0 for c in COMPONENTS}
+
+    # pending idle gap per component (merged across ops)
+    pending = {c: 0.0 for c in COMPONENTS}
+
+    def close_gap(c: str):
+        nonlocal setpm, overhead
+        gap = pending[c]
+        pending[c] = 0.0
+        if gap <= 0:
+            return
+        pol = cp[c]
+        # HBM auto-refresh is a FLOOR: the DRAM refresh burn does not
+        # shrink when the logic threshold voltage changes (paper §6.5)
+        leak = max(leak_logic, g.leak_hbm_refresh) if c == "hbm" \
+            else leak_logic
+        e, exposed, nw, sp = _gated_idle_energy(
+            gap, static_w[c], mode=pol.mode, bet_s=bet_s(pol.delay_key),
+            delay_s=delay_s(pol.delay_key),
+            window_s=bet_s(pol.delay_key) * g.detection_window_frac,
+            leak=leak)
+        static_j[c] += e
+        overhead_local = exposed
+        if c in ("hbm", "ici"):
+            # wake overlapped with the long DMA issue latency half the time
+            overhead_local *= 0.5
+        nonlocal_overhead(overhead_local)
+        setpm += sp
+        wakes[c] += nw
+
+    def nonlocal_overhead(x: float):
+        nonlocal overhead
+        overhead += x
+
+    def fine_grained_vu(t_vu: float, dur: float, n: int):
+        """VU slack inside a mixed op is fragmented into per-burst gaps
+        (paper Fig 15): HW detection mostly cannot exploit them, SW setpm
+        can. Returns nothing; mutates accumulators."""
+        nonlocal setpm
+        pol = cp["vu"]
+        slack = dur - t_vu
+        if slack <= 0:
+            return
+        active_cy = max(1.0, npu.cycles(t_vu))
+        n_bursts = max(1.0, active_cy / g.vu_burst_cycles)
+        gap_cy = npu.cycles(slack) / n_bursts
+        bet_cy = g.bet["vu"] * knobs.delay_scale
+        delay_cy = g.on_off_delay["vu"] * knobs.delay_scale
+        window_cy = bet_cy * g.detection_window_frac
+        p = static_w["vu"]
+        if pol.mode == "none":
+            static_j["vu"] += p * slack * n
+        elif pol.mode == "ideal":
+            pass
+        elif pol.mode == "hw":
+            if gap_cy > bet_cy:
+                gated_frac = max(0.0, (gap_cy - window_cy) / gap_cy)
+                static_j["vu"] += p * slack * n * (
+                    (1 - gated_frac) + leak_logic * gated_frac)
+                # exposed wake per burst: Base/HW hardware cannot pre-wake
+                nonlocal_overhead(n_bursts * delay_cy / npu.freq_hz * n)
+                wakes["vu"] += n_bursts * n
+            else:
+                static_j["vu"] += p * slack * n
+        else:  # sw
+            if gap_cy >= max(bet_cy, 2 * delay_cy):
+                trans = 2 * delay_cy / gap_cy
+                static_j["vu"] += p * slack * n * (
+                    trans + leak_logic * (1 - trans))
+                setpm += 2 * n_bursts * n
+                wakes["vu"] += n_bursts * n
+            else:
+                static_j["vu"] += p * slack * n
+
+    for op in wl.ops:
+        t = op_times(op, npu)
+        dur = t["_dur"]
+        n = op.count
+        for c in COMPONENTS:
+            a = t[c] if c in t else 0.0
+            if c in ("sram", "other"):
+                a = dur  # handled below
+            if a > 0:
+                close_gap(c)
+
+        # --- active-time static & dynamic energy (xN instances) ---
+        for c in ("sa", "vu", "hbm", "ici"):
+            a = t[c]
+            if a <= 0:
+                pending[c] += dur * n
+                continue
+            pol = cp[c]
+            # dynamic: proportional to useful work
+            if c == "sa":
+                dynamic_j[c] += dyn_w[c] * (op.flops_sa / npu.sa_flops) * n
+            else:
+                dynamic_j[c] += dyn_w[c] * a * n
+            # static during the active portion
+            if c == "sa" and pol.spatial_sa and op.matmul_dims is not None:
+                st = gating_stats(*op.matmul_dims, npu.sa_width)
+                occ = (st.frac_on + g.leak_pe_weight_on * st.frac_w_on
+                       + leak_logic * st.frac_off)
+                if pol.mode == "ideal":
+                    occ = st.frac_on
+                static_j[c] += static_w[c] * occ * a * n
+            else:
+                static_j[c] += static_w[c] * a * n
+            # within-op slack
+            if c == "vu":
+                fine_grained_vu(a, dur, n)
+                continue
+            slack = dur - a
+            if slack > 0:
+                leak = max(leak_logic, g.leak_hbm_refresh) if c == "hbm" \
+                    else leak_logic
+                e, exposed, nw, sp = _gated_idle_energy(
+                    slack, static_w[c], mode=pol.mode,
+                    bet_s=bet_s(pol.delay_key),
+                    delay_s=delay_s(pol.delay_key),
+                    window_s=bet_s(pol.delay_key)
+                    * g.detection_window_frac,
+                    leak=leak)
+                static_j[c] += e * n
+                ov = exposed * n
+                if c in ("hbm", "ici"):
+                    ov *= 0.5
+                nonlocal_overhead(ov)
+                setpm += sp * n
+                wakes[c] += nw * n
+
+        # --- SRAM: capacity-proportional static, demand-gated remainder ---
+        pol = cp["sram"]
+        used = min(1.0, op.sram_demand / npu.sram_bytes)
+        unused = 1.0 - used
+        if pol.sram_state == "on":
+            sram_leak_unused = 1.0
+        elif pol.sram_state == "sleep":
+            sram_leak_unused = leak_sleep
+        elif pol.sram_state == "off":
+            sram_leak_unused = leak_off
+        else:  # ideal
+            sram_leak_unused = 0.0
+        static_j["sram"] += static_w["sram"] * dur * n * (
+            used + unused * sram_leak_unused)
+        if pol.sram_state in ("sleep", "off"):
+            setpm += (2.0 if pol.mode == "sw" else 0.0)  # per op boundary
+        dynamic_j["sram"] += dyn_w["sram"] * max(
+            t["sa"], t["vu"], t["hbm"], t["ici"]) * 0.5 * n
+
+        # --- other: never gated ---
+        static_j["other"] += static_w["other"] * dur * n
+        dynamic_j["other"] += dyn_w["other"] * dur * 0.3 * n
+
+        runtime += dur * n
+
+    # close trailing gaps
+    for c in COMPONENTS:
+        close_gap(c)
+
+    runtime += overhead
+    return EnergyReport(
+        workload=wl.name, policy=policy, npu=npu.name,
+        runtime_s=runtime, static_j=static_j, dynamic_j=dynamic_j,
+        setpm_count=setpm, wake_events=wakes)
+
+
+def evaluate_all(wl: Workload, npu="NPU-D",
+                 knobs: PolicyKnobs = PolicyKnobs()) \
+        -> dict[str, EnergyReport]:
+    return {p: evaluate(wl, npu, p, knobs) for p in POLICIES}
+
+
+def savings_vs_nopg(reports: dict[str, EnergyReport]) -> dict[str, float]:
+    base = reports["NoPG"].total_j
+    return {p: 1.0 - r.total_j / base for p, r in reports.items()}

@@ -1,0 +1,127 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Per (arch x shape x mesh) cell:
+
+  compute_s    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory_s     = HLO_bytes / (chips x HBM_bw)
+  collective_s = collective_bytes / (chips x link_bw x links)
+
+HLO_FLOPs / bytes / collective bytes come from ``repro.core.hlo.analyze``
+on ``compiled.as_text()`` (while-body costs scaled by trip count — XLA's
+own cost_analysis counts loop bodies once). All quantities are PER DEVICE
+(the HLO is the per-partition program), so the "/ chips" division is
+already implicit and the terms below use per-chip peaks directly.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+from repro.core.hlo import HloCosts, analyze
+from repro.core.hw import TARGET, RooflineTarget
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device quantities from the compiled HLO
+    flops: float
+    memory_bytes: float
+    collective_bytes: dict[str, float]
+    # the three terms, seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    # analytic model FLOPs (6ND etc.), whole-job, for the usefulness ratio
+    model_flops: float = 0.0
+    bytes_per_device: float = 0.0      # from memory_analysis (peak usage)
+    xla_cost_flops: float = 0.0        # unscaled cross-check
+    notes: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap lower bound on step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the modeled step time: the score.
+        (model_flops / chips / peak) / max-term."""
+        if self.step_time_s <= 0 or self.model_flops <= 0:
+            return 0.0
+        ideal = self.model_flops / self.n_chips / TARGET.peak_flops
+        return ideal / self.step_time_s
+
+    @property
+    def flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPS (per-device-normalized): remat waste."""
+        if self.flops <= 0:
+            return 0.0
+        return (self.model_flops / self.n_chips) / self.flops
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 roofline_fraction=self.roofline_fraction,
+                 flops_ratio=self.flops_ratio)
+        return d
+
+
+def report_from_hlo(text: str, *, arch: str, shape: str, mesh: str,
+                    n_chips: int, model_flops: float = 0.0,
+                    bytes_per_device: float = 0.0,
+                    xla_cost_flops: float = 0.0,
+                    target: RooflineTarget = TARGET,
+                    notes: str = "") -> RooflineReport:
+    c: HloCosts = analyze(text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, n_chips=n_chips,
+        flops=c.flops, memory_bytes=c.memory_bytes,
+        collective_bytes=c.collective_bytes,
+        compute_s=c.flops / target.peak_flops,
+        memory_s=c.memory_bytes / target.hbm_bw,
+        collective_s=c.total_collective_bytes
+        / (target.ici_bw_link * target.ici_links),
+        model_flops=model_flops,
+        bytes_per_device=bytes_per_device,
+        xla_cost_flops=xla_cost_flops,
+        notes=notes)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """Whole-job useful FLOPs: 6ND train, 2ND decode/prefill (MoE: active).
+    Attention flops added explicitly (they are not in the 6ND rule)."""
+    from repro.models.registry import count_params
+    n_active = count_params(cfg, active_only=True)
+    n_embed = cfg.vocab_padded * cfg.d_model
+    n_body = n_active - n_embed * (1 if cfg.tie_embeddings else 2)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        tokens = B  # one step
+        mult = 2.0
+        attn = 2.0 * B * S * cfg.n_layers * (
+            0 if cfg.family == "ssm" else
+            max(1, cfg.n_heads) * max(1, cfg.head_dim)) * 2
+    else:
+        tokens = B * S
+        mult = 6.0 if shape.kind == "train" else 2.0
+        # causal attention: S/2 average context
+        attn_per_layer = 2.0 * tokens * (S / 2) * max(1, cfg.n_heads) \
+            * max(1, cfg.head_dim) * 2
+        if cfg.family == "ssm":
+            attn_per_layer = 0.0
+        attn = attn_per_layer * cfg.n_layers * (3 if shape.kind == "train"
+                                                else 1)
+    # lm_head + embed
+    head = 2.0 * tokens * n_embed * (3 if shape.kind == "train" else 1)
+    return mult * tokens * n_body + attn + head

@@ -1,0 +1,98 @@
+"""SLO-constrained configuration search + cross-generation energy
+efficiency (paper §3, Fig 2, Table 4).
+
+The paper's methodology: profile each workload at the default batch on
+the minimum number of NPU-D chips; 1/5 of that performance is the 1xSLO;
+for every NPU generation, sweep (chips, batch) and keep the most
+energy-efficient SLO-compliant configuration. We reproduce the sweep with
+the op-level simulator: performance = tokens/s (train, decode) or
+requests/s (prefill); energy efficiency = useful work per joule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from repro.core.hw import NPUS, get_npu
+from repro.core.opgen import Workload, llm_workload
+from repro.core.policies import evaluate
+
+
+@dataclass(frozen=True)
+class SweepPoint:
+    npu: str
+    n_chips: int
+    batch: int
+    perf: float           # work units / s (all chips together)
+    energy_j: float       # J per workload invocation (all chips)
+    work: float           # work units per invocation
+
+    @property
+    def efficiency(self) -> float:
+        return self.work / self.energy_j  # work per J
+
+
+def _measure(model: str, phase: str, npu: str, n_chips: int,
+             batch: int) -> SweepPoint:
+    tp = min(n_chips, 8)
+    dp = max(1, n_chips // tp)
+    wl = llm_workload(model, phase, batch=batch, n_chips=n_chips,
+                      tp=tp, dp=dp)
+    rep = evaluate(wl, npu, "NoPG")
+    if phase == "train":
+        work = batch * 4096.0          # tokens per step
+    elif phase == "prefill":
+        work = float(batch)            # requests
+    else:
+        work = float(batch)            # tokens per decode step
+    perf = work / rep.runtime_s
+    return SweepPoint(npu, n_chips, batch, perf,
+                      rep.total_j * n_chips, work)
+
+
+def hbm_fits(model: str, npu: str, n_chips: int, batch: int,
+             phase: str) -> bool:
+    """Coarse capacity check: weights (+optimizer for train) + KV cache."""
+    from repro.core.opgen import LLAMA
+    c = LLAMA[model]
+    n_params = c.L * (c.d * (c.d + 2 * c.Hkv * (c.d // c.H) + c.d)
+                      + 3 * c.d * c.ff) + 2 * c.d * c.vocab
+    spec = get_npu(npu)
+    bytes_needed = n_params * (16.0 if phase == "train" else 2.0)
+    if phase != "train":
+        kv = c.L * batch * 4608 * 2 * c.Hkv * (c.d // c.H) * 2.0
+        bytes_needed += kv
+    return bytes_needed <= spec.hbm_gb * 1e9 * n_chips * 0.9
+
+
+def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
+              gens=("NPU-A", "NPU-B", "NPU-C", "NPU-D", "NPU-E"),
+              batches=(1, 4, 8, 32, 128, 512),
+              chip_counts=(1, 2, 4, 8, 16, 32, 64)) -> dict:
+    """Returns {gen: best SweepPoint or None, "_slo": value}."""
+    # reference: default batch, minimum NPU-D chips that fit
+    ref_batch = {"train": 32, "prefill": 4, "decode": 8}[phase]
+    ref = None
+    for n in chip_counts:
+        if hbm_fits(model, "NPU-D", n, ref_batch, phase):
+            ref = _measure(model, phase, "NPU-D", n, ref_batch)
+            break
+    if ref is None:
+        return {"_slo": None}
+    # per-chip normalized SLO (1/5 of reference performance per chip)
+    slo_perf_per_chip = ref.perf / ref.n_chips / slo_relax
+
+    out: dict = {"_slo": slo_perf_per_chip}
+    for gen in gens:
+        best: Optional[SweepPoint] = None
+        for n in chip_counts:
+            for b in batches:
+                if not hbm_fits(model, gen, n, b, phase):
+                    continue
+                pt = _measure(model, phase, gen, n, b)
+                if pt.perf / pt.n_chips < slo_perf_per_chip:
+                    continue
+                if best is None or pt.efficiency > best.efficiency:
+                    best = pt
+        out[gen] = best
+    return out

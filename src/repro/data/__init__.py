@@ -1,0 +1,4 @@
+from repro.data.pipeline import SyntheticDataset
+from repro.data.specs import batch_specs, make_batch
+
+__all__ = ["SyntheticDataset", "batch_specs", "make_batch"]

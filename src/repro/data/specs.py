@@ -1,0 +1,70 @@
+"""Input specifications per (architecture x shape) cell.
+
+``batch_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input — weak-type-correct, shardable, never allocated — used by the dry-run.
+``make_batch`` materializes the same structure with deterministic synthetic
+data for smoke tests and real training.
+
+Modality frontends are STUBS per the assignment: audio cells feed
+precomputed frame embeddings, VLM cells feed precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                batch_override: int | None = None) -> dict:
+    """Abstract input tree for train/prefill cells (decode handled in
+    launch.dryrun with the cache struct)."""
+    B = batch_override if batch_override is not None else shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+                "cache_len": jax.ShapeDtypeStruct((), i32)}
+    if cfg.frontend == "audio":
+        out = {"frames": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                              jnp.bfloat16)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return out
+    if cfg.frontend == "vision":
+        text = S - cfg.frontend_seq
+        out = {
+            "patches": jax.ShapeDtypeStruct(
+                (B, cfg.frontend_seq, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, text), i32),
+        }
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, text), i32)
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return out
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeConfig, *, seed: int = 0,
+               batch_override: int | None = None) -> dict:
+    """Concrete synthetic batch matching ``batch_specs`` (numpy -> jnp)."""
+    rng = np.random.default_rng(seed)
+    specs = batch_specs(cfg, shape, batch_override)
+    out = {}
+    for name, s in specs.items():
+        if name == "cache_len":
+            out[name] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+        elif s.dtype == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "labels") else 2
+            out[name] = jnp.asarray(
+                rng.integers(0, hi, size=s.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(size=s.shape).astype(np.float32),
+                dtype=s.dtype)
+    return out

@@ -1,0 +1,93 @@
+"""Single-token (decode) attention kernel against a paged KV cache.
+
+The decode cells are HBM-bound: the step reads the whole KV cache once.
+This kernel is the decode-side analogue of ReGate's N/K-underutilization
+gating (paper Fig 10): cache blocks BEYOND ``cache_len`` are never
+touched — ``@pl.when`` skips the block's loads and MACs entirely, the
+same way the SA's prefix bitmaps power off dead columns. The pure-JAX
+path masks them instead (full cache read every step).
+
+Layout: q (BH, D); k/v caches (BH, S, D); grid (BH, S/bk) with the kv
+dim sequential; running softmax state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_k: int, bk: int, scale: float):
+    ki = pl.program_id(1)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # block skip: the whole block is beyond the live cache
+    @pl.when(ki * bk <= cache_len)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale            # (1, D)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = s + jnp.where(k_pos <= cache_len, 0.0, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention_p(q: jax.Array, k_cache: jax.Array,
+                       v_cache: jax.Array, cache_len: jax.Array, *,
+                       bk: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (BH, D); caches: (BH, S, D); cache_len: () int32.
+
+    Attends to cache positions [0, cache_len]. Returns (BH, D)."""
+    BH, D = q.shape
+    S = k_cache.shape[1]
+    assert S % bk == 0, (S, bk)
+    nk = S // bk
+    scale = D ** -0.5
+    lens = jnp.broadcast_to(cache_len.astype(jnp.int32), (1,))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=nk, bk=bk, scale=scale),
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q[:, None, :], k_cache, v_cache)
+    return out[:, 0, :]

@@ -1,0 +1,100 @@
+"""Blocked causal attention kernel with causal block skipping.
+
+The prefill cells are attention-dominated; the pure-JAX flash path scans
+the full (q_block x kv_block) rectangle and relies on masking, paying ~2x
+the useful FLOPs for causal attention. This kernel predicates each kv
+block with ``@pl.when(block is not fully masked)`` — the MXU never sees
+the upper triangle. (On-chip this is the dynamic-energy/latency analogue
+of ReGate's SA gating: work that the mask would zero is never issued.)
+
+Layout: q/k/v (BH, S, D) — batch x heads pre-flattened by ops.py.
+Grid (BH, nq, nk); nk innermost and sequential; online-softmax running
+state (m, l, acc) in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, n_k: int, bq: int, bk: int, scale: float,
+            seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skip: all q positions < all kv positions => fully masked
+    run = True
+    if causal:
+        run = ki * bk <= qi * bq + bq - 1
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (bq, bk)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = k_pos < seq_len
+        if causal:
+            ok = ok & (k_pos <= q_pos)
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention_p(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, bq: int = 128, bk: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """q/k/v: (BH, S, D). Returns (BH, S, D)."""
+    BH, S, D = q.shape
+    Sk = k.shape[1]
+    assert S % bq == 0 and Sk % bk == 0, (S, Sk, bq, bk)
+    nq, nk = S // bq, Sk // bk
+    scale = D ** -0.5
+    return pl.pallas_call(
+        functools.partial(_kernel, causal=causal, n_k=nk, bq=bq, bk=bk,
+                          scale=scale, seq_len=Sk),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,70 @@
+"""Gated matmul — the TPU-native analogue of ReGate's spatial SA gating.
+
+The paper powers off SA rows/columns holding only zero weights (detected
+by the col_nz/row_nz prefix bitmaps, Fig 12). Software on a real TPU cannot
+gate PEs, but it CAN skip the MXU work and VMEM traffic of weight tiles
+that are entirely zero — converting the paper's *static*-power saving into
+a dynamic-energy + latency saving, which is the only lever software has.
+
+The kernel takes a per-(K-tile, N-tile) nonzero bitmap (computed once per
+weight tensor by ``ops.gated_matmul``) and predicates the dot with
+``@pl.when``. N/K-underutilized matmuls that a compiler would zero-pad to
+the 128-lane grid (the paper's Fig 10 cases 2 and 3) skip the padded tiles
+entirely.
+
+Grid: (M/bm, N/bn, K/bk), K innermost; f32 accumulator in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(bitmap_ref, x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+    ni = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nz = bitmap_ref[ki, ni]
+
+    @pl.when(nz != 0)
+    def _compute():
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def gated_matmul_p(x: jax.Array, w: jax.Array, bitmap: jax.Array, *,
+                   bm: int = 128, bn: int = 128, bk: int = 128,
+                   interpret: bool = True) -> jax.Array:
+    """x: (M, K); w: (K, N); bitmap: (K/bk, N/bn) int32 tile-nonzero map."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K // bk, N // bn), lambda mi, ni, ki: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((bk, bn), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(bitmap, x, w)

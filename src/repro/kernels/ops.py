@@ -1,0 +1,64 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with ``interpret=True`` (the kernel
+body executes in Python, validating the BlockSpec tiling and predication
+logic); on a real TPU set ``interpret=False`` (the default flips on TPU
+backends automatically).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_p
+from repro.kernels.gated_matmul import gated_matmul_p
+from repro.kernels.ssd_scan import ssd_scan_p
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tile_nonzero_bitmap(w: jax.Array, bk: int, bn: int) -> jax.Array:
+    """Per-(K-tile, N-tile) any-nonzero map — the tile-level analogue of
+    the paper's col_nz/row_nz PE bitmaps (Fig 12)."""
+    K, N = w.shape
+    t = w.reshape(K // bk, bk, N // bn, bn)
+    return (jnp.abs(t).max(axis=(1, 3)) > 0).astype(jnp.int32)
+
+
+def gated_matmul(x: jax.Array, w: jax.Array, *, bm: int = 128,
+                 bn: int = 128, bk: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    """[M,K] x [K,N] matmul that skips all-zero weight tiles."""
+    if interpret is None:
+        interpret = _default_interpret()
+    bitmap = tile_nonzero_bitmap(w, bk, bn)
+    return gated_matmul_p(x, w, bitmap, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q/k/v: (B, S, H, D) with equal head counts (broadcast GQA first).
+    Returns (B, S, H, D)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    B, S, H, D = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, t.shape[1], D)
+    o = flash_attention_p(fold(q), fold(k), fold(v), causal=causal,
+                          bq=bq, bk=bk, interpret=interpret)
+    return o.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Chunked SSD. x: (BH, S, P); dt: (BH, S); A: (BH,); B/C: (BH, S, N).
+    Returns (y, final_state)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return ssd_scan_p(x, dt, A, B, C, chunk=chunk, interpret=interpret)

@@ -1,0 +1,99 @@
+"""Chunked SSD (state-space duality) kernel for the mamba2/hymba cells.
+
+Implements the Mamba-2 chunked algorithm: the intra-chunk part in its
+quadratic "dual" form (MXU-friendly (Q x Q) x (Q x P) matmuls), the
+inter-chunk part as a sequential state recurrence carried in VMEM scratch
+across the chunk grid dimension. The state never round-trips to HBM
+between chunks — the kernel's whole point on TPU.
+
+Layout: x (BH, S, P), dt (BH, S), A (BH, 1), B/C (BH, S, N).
+Grid (BH, n_chunks); chunks sequential (innermost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, state_ref, *,
+            n_chunks: int, Q: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0, 0].astype(jnp.float32)
+    dt = dt_ref[0].astype(jnp.float32)                    # (Q,)
+    xq = x_ref[0].astype(jnp.float32)                     # (Q, P)
+    bq = b_ref[0].astype(jnp.float32)                     # (Q, N)
+    cq = c_ref[0].astype(jnp.float32)                     # (Q, N)
+
+    dA = dt * a                                           # (Q,) negative
+    cum = jnp.cumsum(dA)                                  # (Q,)
+    # intra-chunk dual form; mask the log BEFORE exp (overflow safety)
+    li = cum[:, None] - cum[None, :]                      # (Qi, Qj)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jq = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    lmat = jnp.exp(jnp.where(iq >= jq, li, -1e30))
+    scores = jax.lax.dot_general(cq, bq, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    dx = dt[:, None] * xq                                 # (Q, P)
+    y_intra = jax.lax.dot_general(scores * lmat, dx,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: carried state h (P, N)
+    y_inter = jax.lax.dot_general(
+        cq * jnp.exp(cum)[:, None], state_ref[...],
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (Q, P)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+    # state update: h' = exp(cum[-1]) h + sum_j decay_j dx_j^T b_j
+    decay_end = jnp.exp(cum[Q - 1] - cum)                 # (Q,)
+    s_chunk = jax.lax.dot_general(
+        dx * decay_end[:, None], bq, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (P, N)
+    state_ref[...] = state_ref[...] * jnp.exp(cum[Q - 1]) + s_chunk
+
+    @pl.when(ci == n_chunks - 1)
+    def _done():
+        h_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_p(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+               C: jax.Array, *, chunk: int = 128,
+               interpret: bool = True):
+    """x: (BH, S, P); dt: (BH, S); A: (BH,); B/C: (BH, S, N).
+
+    Returns (y (BH, S, P), final state (BH, P, N))."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    a2 = A.reshape(BH, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc, Q=chunk),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk), lambda b, ci: (b, ci)),
+            pl.BlockSpec((1, 1), lambda b, ci: (b, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, ci: (b, ci, 0)),
+            pl.BlockSpec((1, P, N), lambda b, ci: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, B, C)

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization. Smoke tests see 1 CPU
+device; only the dry-run sets XLA_FLAGS to fabricate 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_desc(mesh) -> str:
+    return "x".join(f"{n}={s}" for n, s in
+                    zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

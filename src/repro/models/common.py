@@ -1,0 +1,334 @@
+"""Shared model primitives: norms, RoPE, activations, chunked attention.
+
+``window`` arguments are ``None`` (no sliding window — static) or an int /
+traced int32 scalar (sliding-window size). Traced windows let one scanned
+layer stack mix global and SWA layers (hymba) without unrolling.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+Window = Union[None, int, jax.Array]
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def gelu(x):  # tanh approximation (TPU-friendly)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": gelu, "gelu_glu": gelu}[name]
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (seq,) or (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]  # broadcast over heads
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention cores. ``plain`` materializes (S, S) scores — used for short
+# sequences; ``chunked`` is an online-softmax scan over KV blocks (flash
+# semantics in XLA), used for the 32k/500k cells so the dry-run never claims
+# a quadratic score buffer.
+# --------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _window_ok(ok, q_pos, k_pos, window: Window):
+    if window is None:
+        return ok
+    return ok & (k_pos[None, :] > q_pos[:, None] - window)
+
+
+def plain_attention(q, k, v, *, causal: bool, window: Window = None,
+                    q_offset=0, scale: Optional[float] = None,
+                    prefix_len: int = 0) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D[v]). GQA by head grouping."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    groups = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, groups, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    ok = jnp.ones((Sq, k.shape[1]), jnp.bool_)
+    if causal:
+        ok = k_pos[None, :] <= q_pos[:, None]
+    ok = _window_ok(ok, q_pos, k_pos, window)
+    if prefix_len > 0:  # prefix-LM: everything attends to the prefix block
+        ok = ok | (k_pos[None, :] < prefix_len)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def _pad_seq(x, chunk):
+    S = x.shape[1]
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x, n
+
+
+def flash_attention_jax(q, k, v, *, causal: bool, window: Window = None,
+                        q_offset=0, q_chunk: int = 2048,
+                        kv_chunk: int = 1024,
+                        scale: Optional[float] = None,
+                        prefix_len: int = 0) -> jax.Array:
+    """Double-chunked online-softmax attention (flash semantics in XLA).
+
+    Both the query and KV sequence dims are blocked, so peak memory is
+    O(q_chunk x kv_chunk) per (batch, head) instead of O(Sq x Sk). KV heads
+    are broadcast to the full head count first so the head dim (not the tiny
+    kv-head dim) carries the tensor-parallel sharding.
+
+    Baseline limitation (recorded in EXPERIMENTS.md §Perf): the kv scan
+    always runs the full rectangle and relies on masking for causality, so
+    causal attention does ~2x the useful FLOPs. The Pallas kernel and the
+    hillclimbed variant (triangle blocking) eliminate this.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = constrain(k, "batch", "kv_seq", "heads", None)
+    v = constrain(v, "batch", "kv_seq", "heads", None)
+
+    q = (q.astype(jnp.float32) * scale)
+    qp, nq = _pad_seq(q, q_chunk)
+    kp, nk = _pad_seq(k, kv_chunk)
+    vp, _ = _pad_seq(v, kv_chunk)
+    qc = qp.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    kc = kp.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, xs):
+        qb, qi = xs  # (B, qc, H, D)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, ys):
+            m, l, acc = carry
+            kb, vb, ki = ys
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb.astype(kb.dtype), kb,
+                           preferred_element_type=jnp.float32)
+            bounds = (k_pos[None, :] < Sk) & (q_pos[:, None] < Sq + q_offset)
+            ok = bounds
+            if causal:
+                ok = ok & (k_pos[None, :] <= q_pos[:, None])
+            okw = _window_ok(ok, q_pos, k_pos, window)
+            if prefix_len > 0:  # bidirectional attention within the prefix
+                okw = okw | (bounds & (k_pos[None, :] < prefix_len))
+            s = s + jnp.where(okw, 0.0, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dv), jnp.float32)
+        # remat per kv block: the scan backward otherwise stacks every
+        # (q_block x kv_block) score tensor as a residual
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_block), (m0, l0, a0),
+            (kc, vc, jnp.arange(nk)))
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,H,qc,Dv)
+        return None, ob.transpose(0, 2, 1, 3)
+
+    _, oc = jax.lax.scan(jax.checkpoint(q_block), None,
+                         (qc, jnp.arange(nq)))
+    out = oc.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def flash_attention_triangle(q, k, v, *, causal: bool = True,
+                             window: Optional[int] = None,
+                             q_chunk: int = 2048, kv_chunk: int = 1024,
+                             scale: Optional[float] = None) -> jax.Array:
+    """Triangle/window-blocked causal attention (§Perf hillclimb variant).
+
+    The baseline ``flash_attention_jax`` scans the full (q x kv) rectangle
+    and masks — 2x the useful work for causal, and ~S/window x for
+    sliding-window layers. This variant unrolls the q-chunk loop (a small
+    static count) and gives each q chunk a kv scan over ONLY the blocks
+    that can be live: ``[lo(window), qi]``. Requires static ``window``
+    (hymba's global layers pass ``window=None``), self-attention (Sq==Sk),
+    and no prefix (prefix-LM cells use the baseline path).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    assert causal and Sq == Sk, "triangle variant is causal self-attn only"
+    Hkv = k.shape[2]
+    Dv = v.shape[-1]
+    scale = scale if scale is not None else D ** -0.5
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    k = constrain(k, "batch", "kv_seq", "heads", None)
+    v = constrain(v, "batch", "kv_seq", "heads", None)
+
+    q = (q.astype(jnp.float32) * scale).astype(k.dtype)
+    qp, nq = _pad_seq(q, q_chunk)
+    kp, nk = _pad_seq(k, kv_chunk)
+    vp, _ = _pad_seq(v, kv_chunk)
+    kc = kp.reshape(B, nk, kv_chunk, H, D)
+    vc = vp.reshape(B, nk, kv_chunk, H, Dv)
+
+    def kv_block(qb, q_pos, carry, kb, vb, k0):
+        m, l, acc = carry
+        k_pos = k0 + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb,
+                       preferred_element_type=jnp.float32)
+        ok = (k_pos[None, :] < Sk) & (q_pos[:, None] < Sq) \
+            & (k_pos[None, :] <= q_pos[:, None])
+        ok = _window_ok(ok, q_pos, k_pos, window)
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return m_new, l, acc
+
+    outs = []
+    for qi in range(nq):  # static unroll: nq is small (S / q_chunk)
+        qb = jax.lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, 1)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+        hi = qi * q_chunk + q_chunk - 1          # last live kv position
+        lo = 0 if window is None else max(0, qi * q_chunk - int(window))
+        k_lo, k_hi = lo // kv_chunk, hi // kv_chunk  # inclusive blocks
+        m = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, H, q_chunk), jnp.float32)
+        acc = jnp.zeros((B, H, q_chunk, Dv), jnp.float32)
+        n_blk = k_hi - k_lo + 1
+        if n_blk > 2:  # scan the interior blocks, unroll none
+            kcs = jax.lax.dynamic_slice_in_dim(kc, k_lo, n_blk, 1)
+            vcs = jax.lax.dynamic_slice_in_dim(vc, k_lo, n_blk, 1)
+
+            def body(carry, xs):
+                kb, vb, ki = xs
+                return kv_block(qb, q_pos, carry, kb, vb,
+                                (k_lo + ki) * kv_chunk), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(body), (m, l, acc),
+                (kcs.transpose(1, 0, 2, 3, 4),
+                 vcs.transpose(1, 0, 2, 3, 4), jnp.arange(n_blk)))
+        else:
+            for ki in range(k_lo, k_hi + 1):
+                kb = jax.lax.dynamic_slice_in_dim(kc, ki, 1, 1)[:, 0]
+                vb = jax.lax.dynamic_slice_in_dim(vc, ki, 1, 1)[:, 0]
+                m, l, acc = kv_block(qb, q_pos, (m, l, acc), kb, vb,
+                                     ki * kv_chunk)
+        ob = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(ob.transpose(0, 2, 1, 3))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :Sq].astype(v.dtype)
+
+
+# toggled by the hillclimb (--attention triangle); see EXPERIMENTS.md §Perf
+ATTENTION_VARIANT = {"impl": "baseline"}
+
+
+def attention(q, k, v, *, causal: bool, window: Window = None, q_offset=0,
+              scale: Optional[float] = None, prefix_len: int = 0,
+              chunk_threshold: int = 2048, q_chunk: int = 2048,
+              kv_chunk: int = 1024) -> jax.Array:
+    """Dispatch between plain and flash attention by KV length."""
+    if k.shape[1] <= chunk_threshold:
+        return plain_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, scale=scale,
+                               prefix_len=prefix_len)
+    if (ATTENTION_VARIANT["impl"] == "triangle" and causal
+            and prefix_len == 0 and q.shape[1] == k.shape[1]
+            and isinstance(window, (int, type(None)))):
+        fn = partial(flash_attention_triangle, causal=True, window=window,
+                     q_chunk=min(q_chunk, q.shape[1]), kv_chunk=kv_chunk,
+                     scale=scale)
+        return jax.checkpoint(fn)(q, k, v)
+    fn = partial(flash_attention_jax, causal=causal, window=window,
+                 q_offset=q_offset, q_chunk=min(q_chunk, q.shape[1]),
+                 kv_chunk=kv_chunk, scale=scale, prefix_len=prefix_len)
+    return jax.checkpoint(fn)(q, k, v)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, scale=None,
+                     window: Window = None, prefix_len: int = 0) -> jax.Array:
+    """Single-token attention against a (possibly sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, Hkv, D). Positions > cache_len masked
+    (the new token itself sits at slot ``cache_len``).
+    The KV-seq dim may carry a sharding constraint; GSPMD lowers the softmax
+    to partial reduce + all-reduce (flash-decoding semantics).
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else D ** -0.5
+    groups = H // Hkv
+    # bf16 einsums with f32 accumulation: never materialize an f32 copy of
+    # the (big) KV cache — the dot consumes bf16 directly, as on TPU.
+    qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype) \
+        .reshape(B, Hkv, groups, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(S)
+    ok = k_pos <= cache_len
+    if window is not None:
+        okw = ok & (k_pos > cache_len - window)
+        if prefix_len > 0:
+            okw = okw | (ok & (k_pos < prefix_len))
+        ok = okw
+    s = s + jnp.where(ok, 0.0, NEG_INF)
+    s = constrain(s, "batch", "kv_heads", None, "kv_seq")
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)

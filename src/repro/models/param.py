@@ -1,0 +1,96 @@
+"""Parameter specification machinery.
+
+Models declare an *abstract* parameter tree of ``ParamSpec`` (shape, dtype,
+logical axes, initializer). From it we derive:
+
+* ``jax.ShapeDtypeStruct`` trees for the dry-run (no allocation — the full
+  236B-parameter configs are only ever lowered, never materialized);
+* ``NamedSharding`` trees via the logical-axis rules in ``repro.parallel``;
+* materialized parameter trees for the smoke tests / real training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]  # logical axis names, len == len(shape)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | small_normal | custom
+    init_scale: float = 1.0
+    custom_init: Optional[Callable[[jax.Array, tuple, Any], jax.Array]] = None
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def spec(shape, axes, init="normal", init_scale=1.0, dtype=jnp.float32,
+         custom_init=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(axes), dtype, init, init_scale,
+                     custom_init)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_sds(specs) -> Any:
+    """Abstract ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(lambda s: s.sds, specs, is_leaf=is_spec)
+
+
+def tree_num_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def _init_one(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.custom_init is not None:
+        return s.custom_init(key, s.shape, s.dtype)
+    if s.init == "zeros":
+        return jnp.zeros(s.shape, s.dtype)
+    if s.init == "ones":
+        return jnp.ones(s.shape, s.dtype)
+    # fan-in-scaled normal; last axis is fan-out by convention
+    fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+    std = s.init_scale / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, s.shape, jnp.float32) * std).astype(s.dtype)
+
+
+def init_params(specs, key: jax.Array) -> Any:
+    """Materialize a parameter tree from specs (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def cast_tree(tree, dtype) -> Any:
+    """Cast floating leaves (mixed-precision compute cast)."""
+    def _c(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_c, tree)
+
+
+def stacked(n: int, s: ParamSpec) -> ParamSpec:
+    """Stack a per-layer spec along a leading 'layers' axis (for lax.scan)."""
+    return dataclasses.replace(s, shape=(n, *s.shape), axes=("layers", *s.axes))
+
+
+def stack_specs(n: int, tree) -> Any:
+    return jax.tree.map(lambda s: stacked(n, s), tree, is_leaf=is_spec)

@@ -1,0 +1,103 @@
+"""Per-architecture parameter trees + layer metadata.
+
+``param_specs(cfg)`` returns the full abstract parameter tree (ParamSpec
+leaves). ``count_params`` sums it analytically; ``active_only=True`` counts
+only the parameters touched per token (MoE: top_k + shared experts).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks
+from repro.models.param import ParamSpec, is_spec, spec, stack_specs
+import jax
+
+
+def layer_specs(cfg: ArchConfig) -> dict:
+    """ParamSpec tree for one (scanned) layer."""
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ssd": blocks.ssd_specs(cfg)}
+    if fam == "hybrid":
+        return {"mix": blocks.hybrid_specs(cfg),
+                "mlp": blocks.mlp_specs(cfg)}
+    if fam == "moe":
+        attn = (blocks.mla_specs(cfg) if cfg.mla else blocks.attn_specs(cfg))
+        return {"attn": attn, "moe": blocks.moe_specs(cfg)}
+    # dense / audio / vlm
+    return {"attn": blocks.attn_specs(cfg), "mlp": blocks.mlp_specs(cfg)}
+
+
+def dense0_specs(cfg: ArchConfig) -> dict:
+    """DeepSeek-style leading dense layer(s) (MLA attn + wide dense MLP)."""
+    return {"attn": blocks.mla_specs(cfg),
+            "mlp": blocks.mlp_specs(cfg, d_ff=cfg.d_ff)}
+
+
+def n_scanned_layers(cfg: ArchConfig) -> int:
+    lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    return cfg.n_layers - lead
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    tree: dict[str, Any] = {
+        "embed": spec((Vp, D), ("vocab", "embed"), init_scale=1.0),
+        "final_norm": spec((D,), ("embed",), init="ones"),
+    }
+    if cfg.frontend:
+        tree["frontend_proj"] = spec((cfg.frontend_dim, D),
+                                     ("frontend", "embed"))
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = spec((D, Vp), ("embed", "vocab"))
+    if cfg.moe and cfg.moe.first_dense_layers:
+        tree["dense0"] = dense0_specs(cfg)
+    tree["layers"] = stack_specs(n_scanned_layers(cfg), layer_specs(cfg))
+    return tree
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    """Analytic parameter count from the spec tree (exact for our impl)."""
+    tree = param_specs(cfg)
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += math.prod(leaf.shape)
+    if active_only and cfg.moe:
+        # replace the full expert bank contribution with top_k experts
+        mo = cfg.moe
+        L = n_scanned_layers(cfg)
+        per_expert = 3 * cfg.d_model * mo.d_ff_expert
+        total -= L * mo.n_experts * per_expert
+        total += L * mo.top_k * per_expert
+    return total
+
+
+def global_layer_indices(cfg: ArchConfig) -> list[int]:
+    """hymba: full-attention layers are first / middle / last."""
+    if cfg.n_global_layers <= 0:
+        return []
+    L = cfg.n_layers
+    if cfg.n_global_layers >= L:
+        return list(range(L))
+    if cfg.n_global_layers == 1:
+        return [0]
+    step = (L - 1) / (cfg.n_global_layers - 1)
+    return sorted({int(round(i * step)) for i in range(cfg.n_global_layers)})
+
+
+def window_array(cfg: ArchConfig, seq_hint: int):
+    """(L,) int32 per-layer attention window (>=seq => effectively global).
+
+    None if the arch has no sliding-window mixing (static full attention).
+    """
+    if cfg.sliding_window <= 0:
+        return None
+    glob = set(global_layer_indices(cfg))
+    big = seq_hint + cfg.sliding_window + 1
+    vals = [big if i in glob else cfg.sliding_window
+            for i in range(cfg.n_layers)]
+    return jnp.asarray(vals, jnp.int32)

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (
+    BASELINE, KV_SEQ, RULE_VARIANTS, SEQ_PARALLEL, ShardingRules, act_pspec,
+    constrain, current_rules, param_pspec, param_shardings, use_rules)
+
+__all__ = [
+    "BASELINE", "KV_SEQ", "RULE_VARIANTS", "SEQ_PARALLEL", "ShardingRules",
+    "act_pspec", "constrain", "current_rules", "param_pspec",
+    "param_shardings", "use_rules",
+]

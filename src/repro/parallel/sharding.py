@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Model code names tensor dimensions with *logical* axes ("vocab", "mlp",
+"batch", ...). A ``ShardingRules`` object maps logical axes to mesh axes; the
+mapping degrades gracefully (an axis whose size does not divide the mesh axis
+is left unsharded), which is what makes one model implementation serve
+qwen3-32b (64 heads) and hymba (25 heads) on the same 16-way model axis.
+
+Hillclimb variants are just different rule tables (see ``RULE_VARIANTS``).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisTarget = Union[None, str, tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> mesh axis (or axis tuple)."""
+
+    name: str
+    param_rules: dict[str, AxisTarget]
+    act_rules: dict[str, AxisTarget]
+
+    def with_updates(self, name: str, param_updates=None, act_updates=None):
+        pr = dict(self.param_rules)
+        pr.update(param_updates or {})
+        ar = dict(self.act_rules)
+        ar.update(act_updates or {})
+        return ShardingRules(name, pr, ar)
+
+
+def _mesh_axis_sizes(mesh_shape: dict[str, int], target: AxisTarget) -> int:
+    if target is None:
+        return 1
+    if isinstance(target, str):
+        return mesh_shape.get(target, 1)
+    n = 1
+    for t in target:
+        n *= mesh_shape.get(t, 1)
+    return n
+
+
+def _resolve(rules: dict[str, AxisTarget], axes: Sequence[Optional[str]],
+             shape: Sequence[int], mesh_shape: dict[str, int]) -> P:
+    """Map logical axes to a PartitionSpec with divisibility + dedup checks."""
+    used: set[str] = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        tgt = rules.get(ax) if ax is not None else None
+        if tgt is None:
+            out.append(None)
+            continue
+        names = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+        names = tuple(n for n in names if n in mesh_shape and n not in used)
+        size = _mesh_axis_sizes(mesh_shape, names)
+        if not names or size <= 1 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(names)
+        out.append(names[0] if len(names) == 1 else names)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspec(rules: ShardingRules, axes, shape, mesh_shape) -> P:
+    return _resolve(rules.param_rules, axes, shape, mesh_shape)
+
+
+def act_pspec(rules: ShardingRules, axes, shape, mesh_shape) -> P:
+    return _resolve(rules.act_rules, axes, shape, mesh_shape)
+
+
+def param_shardings(rules: ShardingRules, specs, mesh: Mesh):
+    """NamedSharding tree for a ParamSpec tree."""
+    from repro.models.param import is_spec
+
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, param_pspec(rules, s.axes, s.shape, mesh_shape)),
+        specs, is_leaf=is_spec)
+
+
+# --------------------------------------------------------------------------
+# Rule tables. "baseline" is the paper-faithful starting point used for every
+# cell; hillclimb variants are recorded in EXPERIMENTS.md §Perf.
+# --------------------------------------------------------------------------
+
+_FSDP = ("data",)           # parameter sharding over the data axis (FSDP)
+_FSDP_POD = ("pod", "data")  # multi-pod FSDP
+_BATCH = ("pod", "data")     # activation batch sharding
+
+BASELINE = ShardingRules(
+    name="baseline",
+    param_rules={
+        "vocab": "model",
+        "embed": _FSDP_POD,
+        "q_heads": "model",      # combined H*head_dim dim
+        "kv_heads": "model",     # combined Hkv*head_dim dim
+        "mlp": "model",
+        "experts": "model",      # expert-parallelism
+        "expert_mlp": None,
+        "ssm_inner": "model",
+        "state": None,
+        "conv": None,
+        "kv_lora": None,
+        "q_lora": None,
+        "heads": "model",        # per-head param dims (qk_norm scales)
+        "frontend": None,
+        "layers": None,
+    },
+    act_rules={
+        "batch": _BATCH,
+        "seq": None,
+        "kv_seq": None,
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "ssm_inner": "model",
+        "state": None,
+        "kv_lora": None,
+    },
+)
+
+# Sequence-parallel variant: shards the sequence dim of activations over the
+# model axis in the norm/residual region (Megatron-SP analogue).
+SEQ_PARALLEL = BASELINE.with_updates(
+    "seq_parallel", act_updates={"seq": "model"})
+
+# Long-context decode variant: shard the KV cache over its sequence dim
+# (flash-decoding semantics: GSPMD lowers softmax over the sharded axis to
+# partial reductions + all-reduce).
+KV_SEQ = BASELINE.with_updates(
+    "kv_seq", act_updates={"kv_seq": "model"},
+    param_updates={})
+
+# MoE hillclimb (fine-grained experts, e.g. granite's 0.5M-param experts):
+# REPLICATE the expert bank instead of expert-parallelism. Dispatch becomes
+# local to each data shard — the per-group buffer all-reduces disappear and
+# only the usual FSDP weight all-gather remains. Wrong trade for big
+# experts (deepseek); see EXPERIMENTS.md §Perf.
+MOE_REPLICATED = BASELINE.with_updates(
+    "moe_replicated",
+    param_updates={"experts": ("data",)},  # FSDP-sharded storage, no EP
+    act_updates={"experts": None})
+
+RULE_VARIANTS: dict[str, ShardingRules] = {
+    r.name: r for r in [BASELINE, SEQ_PARALLEL, KV_SEQ, MOE_REPLICATED]
+}
+
+
+# --------------------------------------------------------------------------
+# Context: model code calls constrain(x, axes...) without threading rules.
+# --------------------------------------------------------------------------
+
+_CURRENT: contextvars.ContextVar[Optional[ShardingRules]] = \
+    contextvars.ContextVar("sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    tok = _CURRENT.set(rules)
+    try:
+        yield
+    finally:
+        _CURRENT.reset(tok)
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CURRENT.get()
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a sharding constraint by logical activation axes (no-op when no
+    rules are active or no mesh is set — keeps smoke tests single-device)."""
+    rules = _CURRENT.get()
+    if rules is None:
+        return x
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    mesh_shape = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    ps = act_pspec(rules, axes, x.shape, mesh_shape)
+    return jax.lax.with_sharding_constraint(x, ps)

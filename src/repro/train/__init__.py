@@ -1,0 +1,3 @@
+from repro.train.steps import TrainState, make_serve_step, make_train_step
+
+__all__ = ["TrainState", "make_train_step", "make_serve_step"]

@@ -1,0 +1,130 @@
+"""Attention-path equivalences: flash==plain, decode==forward, hypothesis
+sweeps over masks/windows/prefix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.specs import make_batch
+from repro.models import model as M
+from repro.models import registry
+from repro.models.common import (decode_attention, flash_attention_jax,
+                                 plain_attention)
+from repro.models.param import init_params
+
+KEY = jax.random.PRNGKey(3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([64, 96, 128]),
+       st.sampled_from([(4, 2), (4, 4), (2, 1)]), st.booleans(),
+       st.sampled_from([None, 16, 48]), st.sampled_from([0, 8]))
+def test_flash_equals_plain(B, S, heads, causal, window, prefix):
+    H, Hkv = heads
+    ks = jax.random.split(jax.random.fold_in(KEY, B * S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, 16), jnp.float32)
+    ref = plain_attention(q, k, v, causal=causal, window=window,
+                          prefix_len=prefix)
+    out = flash_attention_jax(q, k, v, causal=causal, window=window,
+                              prefix_len=prefix, q_chunk=32, kv_chunk=48)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_flash_traced_window():
+    """Traced (per-layer) window values match static ones (hymba mixing)."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 8), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 8), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 8), jnp.float32)
+    a = flash_attention_jax(q, k, v, causal=True, window=16,
+                            q_chunk=32, kv_chunk=32)
+    b = jax.jit(lambda w: flash_attention_jax(
+        q, k, v, causal=True, window=w, q_chunk=32, kv_chunk=32))(
+            jnp.int32(16))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-780m", "hymba-1.5b",
+                                  "deepseek-v2-236b", "granite-moe-1b-a400m",
+                                  "paligemma-3b"])
+def test_decode_matches_forward(arch):
+    """prefill(S) + decode(1 token) logits == forward(S+1) last logits.
+
+    The strongest end-to-end consistency check: exercises KV caches, SSM
+    states, MLA absorption, prefix-LM, and the scan plumbing together.
+    """
+    cfg = get_arch(arch).reduced()
+    params = init_params(registry.param_specs(cfg), KEY)
+    S = 24
+    prefix = cfg.frontend_seq if cfg.frontend == "vision" else 0
+    # for VLM, seq_len covers image patches + text; we want S+1 TEXT tokens
+    shape = ShapeConfig("t", S + 1 + prefix, 2, "prefill")
+    batch = make_batch(cfg, shape, seed=9)
+    toks = batch["tokens"]
+    assert toks.shape[1] == S + 1
+
+    # full forward over S+1 tokens
+    fb = dict(batch)
+    logits_full, _ = M.forward(params, fb, cfg, dtype=jnp.float32)
+    want = logits_full[:, -1]
+
+    # prefill on S tokens, then decode token S
+    pb = dict(batch)
+    pb["tokens"] = toks[:, :S]
+    _, cache = M.prefill_step(params, pb, cfg, dtype=jnp.float32)
+    smax = S + 4 + (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+    full_cache = M.init_cache(cfg, 2, smax, dtype=jnp.float32)
+
+    def graft(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), 0, axis=2)
+
+    full_cache = jax.tree.map(graft, full_cache, cache)
+    db = {"tokens": toks[:, S:S + 1],
+          "cache_len": jnp.asarray(S + prefix, jnp.int32)}
+    got, _ = M.decode_step(params, full_cache, db, cfg, dtype=jnp.float32)
+    got = got[:, 0]
+
+    w = np.asarray(want, np.float32)
+    g = np.asarray(got, np.float32)
+    # compare post-softmax distributions (logit shift-invariance)
+    pw = jax.nn.softmax(w, axis=-1)
+    pg = jax.nn.softmax(g, axis=-1)
+    np.testing.assert_allclose(np.asarray(pg), np.asarray(pw), atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([96, 128, 256]), st.sampled_from([(4, 2), (2, 2)]),
+       st.sampled_from([None, 32, 64]))
+def test_triangle_equals_plain(S, heads, window):
+    from repro.models.common import flash_attention_triangle
+    H, Hkv = heads
+    ks = jax.random.split(jax.random.fold_in(KEY, S + H), 3)
+    q = jax.random.normal(ks[0], (1, S, H, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, Hkv, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, Hkv, 16), jnp.float32)
+    ref = plain_attention(q, k, v, causal=True, window=window)
+    out = flash_attention_triangle(q, k, v, causal=True, window=window,
+                                   q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+def test_segmented_hymba_matches_scanned():
+    """STATIC_WINDOW_SEGMENTS forward == uniform-scan forward."""
+    cfg = get_arch("hymba-1.5b").reduced()
+    params = init_params(registry.param_specs(cfg), KEY)
+    batch = make_batch(cfg, ShapeConfig("t", 32, 2, "train"), seed=5)
+    l0, _ = M.forward(params, batch, cfg, dtype=jnp.float32)
+    M.STATIC_WINDOW_SEGMENTS["enabled"] = True
+    try:
+        l1, _ = M.forward(params, batch, cfg, dtype=jnp.float32)
+    finally:
+        M.STATIC_WINDOW_SEGMENTS["enabled"] = False
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0), atol=1e-4)

@@ -1,0 +1,72 @@
+"""int8+error-feedback gradient compression and the SLO sweep."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.specs import make_batch
+from repro.models import registry
+from repro.models.param import init_params
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import (compress_grads, dequantize_int8,
+                                     init_error_feedback, quantize_int8)
+from repro.train.steps import TrainState, make_train_step
+
+
+def test_int8_roundtrip_bounded_error():
+    g = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 3.0
+    q, s = quantize_int8(g)
+    deq = dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(g),
+                               atol=float(s) * 0.51)
+
+
+def test_error_feedback_telescopes():
+    """Sum of decompressed grads converges to the sum of true grads —
+    the EF residual never grows."""
+    key = jax.random.PRNGKey(1)
+    p = {"w": jnp.zeros((64,))}
+    ef = init_error_feedback(p)
+    true_sum = jnp.zeros((64,))
+    deq_sum = jnp.zeros((64,))
+    for i in range(20):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+        out, ef = compress_grads(g, "int8", ef)
+        true_sum = true_sum + g["w"]
+        deq_sum = deq_sum + out["w"]
+    # residual bounded by one quantization step, NOT 20 of them
+    resid = float(jnp.abs(true_sum - deq_sum).max())
+    assert resid < 0.2, resid
+    np.testing.assert_allclose(np.asarray(ef["w"]),
+                               np.asarray(true_sum - deq_sum), atol=1e-5)
+
+
+@pytest.mark.parametrize("codec", [None, "bf16", "int8"])
+def test_train_step_with_compression(codec):
+    cfg = get_arch("qwen2.5-3b").reduced()
+    opt = AdamWConfig(total_steps=10, warmup_steps=2)
+    params = init_params(registry.param_specs(cfg), jax.random.PRNGKey(0))
+    st = TrainState.create(params, opt, grad_compression=codec)
+    step = jax.jit(make_train_step(cfg, opt, grad_compression=codec))
+    b = make_batch(cfg, ShapeConfig("t", 32, 4, "train"), seed=1)
+    st, m = step(st, b)
+    st, m = step(st, b)
+    assert jnp.isfinite(m["loss"])
+    if codec == "int8":
+        assert "ef" in st.opt_state
+
+
+def test_slo_sweep_monotone_generations():
+    from repro.core.slo import slo_sweep
+    res = slo_sweep("llama3-8b", "decode", batches=(8, 128),
+                    chip_counts=(1, 2, 4, 8))
+    effs = []
+    for gen in ("NPU-A", "NPU-C", "NPU-E"):
+        pt = res.get(gen)
+        if pt is not None:
+            effs.append(pt.efficiency)
+    # newer generations are at least as energy-efficient (paper Fig 2)
+    assert all(b >= a * 0.95 for a, b in zip(effs, effs[1:])), effs

@@ -1,0 +1,98 @@
+"""MoE dispatch correctness: capacity semantics, drop handling, and the
+shard_map dispatch vs the GSPMD path on a multi-device mesh (subprocess —
+the device count must be set before jax initializes)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import blocks
+from repro.models.param import init_params
+from repro.models import registry
+
+KEY = jax.random.PRNGKey(11)
+
+
+def test_moe_group_routes_topk():
+    """With ample capacity every token gets exactly its top-k experts:
+    output == manual dense mixture."""
+    cfg = get_arch("granite-moe-1b-a400m").reduced()
+    specs = registry.layer_specs(cfg)["moe"]
+    p = init_params(specs, KEY)
+    G, D = 32, cfg.d_model
+    tok = jax.random.normal(jax.random.fold_in(KEY, 1), (G, D), jnp.float32)
+    y, aux = blocks._moe_group(p, tok, cfg)
+
+    # dense reference: route each token through its top-k experts
+    logits = tok @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gv, gi = jax.lax.top_k(probs, cfg.moe.top_k)
+    gv = gv / gv.sum(-1, keepdims=True)
+    act = jax.nn.silu
+    ref = jnp.zeros_like(tok)
+    for t in range(G):
+        acc = jnp.zeros((D,))
+        for j in range(cfg.moe.top_k):
+            e = int(gi[t, j])
+            h = act(tok[t] @ p["wg"][e]) * (tok[t] @ p["wu"][e])
+            acc = acc + gv[t, j] * (h @ p["wd"][e])
+        ref = ref.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_dont_crash():
+    import dataclasses
+    cfg = get_arch("granite-moe-1b-a400m").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    specs = registry.layer_specs(cfg)["moe"]
+    p = init_params(specs, KEY)
+    tok = jax.random.normal(KEY, (64, cfg.d_model), jnp.float32)
+    y, aux = blocks._moe_group(p, tok, cfg)
+    assert jnp.isfinite(y).all()
+    # with drops, output norm is smaller than full routing
+    assert float(jnp.abs(y).sum()) > 0
+
+
+_SMAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import AxisType, PartitionSpec as P
+    from repro.configs import get_arch
+    from repro.models import blocks, registry
+    from repro.models.param import init_params
+
+    cfg = get_arch("granite-moe-1b-a400m").reduced()  # 4 experts top-2
+    specs = registry.layer_specs(cfg)["moe"]
+    p = init_params(specs, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
+                          jnp.float32)
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    from repro.parallel.sharding import BASELINE, use_rules
+    with jax.set_mesh(mesh), use_rules(BASELINE):
+        blocks.MOE_SHARD_MAP["enabled"] = False
+        y0, a0 = jax.jit(lambda p, x: blocks.moe_fwd(p, x, cfg))(p, x)
+        blocks.MOE_SHARD_MAP["enabled"] = True
+        y1, a1 = jax.jit(lambda p, x: blocks.moe_fwd(p, x, cfg))(p, x)
+    # capacity semantics differ (global vs per-shard) only under drops;
+    # the reduced config has ample capacity -> identical routing
+    err = float(jnp.abs(y0 - y1).max())
+    assert err < 2e-4, f"smap vs gspmd mismatch: {err}"
+    print("SMAP_OK", err)
+""")
+
+
+def test_moe_shard_map_matches_gspmd():
+    r = subprocess.run([sys.executable, "-c", _SMAP_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+    assert "SMAP_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,159 @@
+"""Property + unit tests for the paper's power-gating plane."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hw import NPUS, get_npu
+from repro.core.opgen import Op, Workload, llm_workload, paper_suite
+from repro.core.policies import (POLICIES, PolicyKnobs, evaluate,
+                                 evaluate_all, savings_vs_nopg)
+from repro.core.power import COMPONENTS, PowerModel, STATIC_SHARES
+from repro.core.sa_gating import (gating_stats, prefix_on_bitmap,
+                                  simulate_pe_grid, spatial_efficiency)
+
+
+# ------------------------------------------------------------ SA gating
+def test_prefix_bitmap_paper_example():
+    """Paper Fig 12: col_nz=0100 -> col_on=1100."""
+    nz = np.array([False, True, False, False])
+    assert prefix_on_bitmap(nz).tolist() == [True, True, False, False]
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=32))
+def test_prefix_bitmap_properties(bits):
+    on = prefix_on_bitmap(np.array(bits))
+    # ON iff any nonzero at-or-after; monotone (once off, stays off)
+    for i in range(len(bits)):
+        assert on[i] == any(bits[i:])
+    for a, b in zip(on, on[1:]):
+        assert a or not b
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 8), st.integers(1, 8),
+       st.sampled_from([4, 8]))
+def test_gating_stats_matches_cycle_sim(M, K, N, saw):
+    """Closed form == exact cycle-level PE simulation (single tile)."""
+    K, N = min(K, saw), min(N, saw)
+    sim = simulate_pe_grid(M, K, N, saw)
+    st_ = gating_stats(M, K, N, saw, weight_load_cycles=0)
+    tot = sim["total"]
+    assert math.isclose(st_.frac_on, sim["on"] / tot, rel_tol=1e-9)
+    assert math.isclose(st_.frac_w_on, sim["w_on"] / tot, rel_tol=1e-9)
+    assert math.isclose(st_.frac_off, sim["off"] / tot, rel_tol=1e-9)
+
+
+def test_gating_stats_underutilization_cases():
+    """Paper Fig 10: all three underutilization cases gate PEs off."""
+    saw = 128
+    full = gating_stats(4096, 128, 128, saw)
+    assert full.frac_off < 1e-9  # all PEs hold live weights
+    n_under = gating_stats(4096, 128, 64, saw)
+    assert 0.45 < n_under.frac_off < 0.55  # half the columns dead
+    k_under = gating_stats(4096, 64, 128, saw)
+    assert 0.45 < k_under.frac_off < 0.55
+    m_under = gating_stats(8, 128, 128, saw)
+    assert m_under.frac_w_on > 0.9  # weights held, data rarely passing
+
+
+def test_spatial_efficiency_ranges():
+    assert spatial_efficiency(4096, 128, 128, 128) > 0.9
+    assert spatial_efficiency(1, 128, 128, 128) < 0.05  # decode GEMV
+
+
+# ------------------------------------------------------------- policies
+@pytest.fixture(scope="module")
+def wl():
+    return llm_workload("llama3-8b", "decode", batch=8, n_chips=1)
+
+
+def test_policy_ordering(wl):
+    """Ideal >= Full >= HW >= Base >= NoPG savings (by construction)."""
+    sv = savings_vs_nopg(evaluate_all(wl))
+    assert sv["NoPG"] == 0.0
+    assert sv["ReGate-Base"] > 0.0
+    assert sv["ReGate-HW"] >= sv["ReGate-Base"] - 1e-9
+    assert sv["ReGate-Full"] >= sv["ReGate-HW"] - 1e-9
+    assert sv["Ideal"] >= sv["ReGate-Full"] - 1e-9
+    assert sv["Ideal"] < 1.0
+
+
+def test_energy_positive_and_conserved(wl):
+    for p in POLICIES:
+        r = evaluate(wl, "NPU-D", p)
+        assert r.total_j > 0
+        assert all(v >= 0 for v in r.static_j.values())
+        assert all(v >= 0 for v in r.dynamic_j.values())
+        # dynamic energy is policy-independent (gating only cuts leakage)
+    dyn = [sum(evaluate(wl, "NPU-D", p).dynamic_j.values())
+           for p in POLICIES]
+    assert max(dyn) - min(dyn) < 1e-9 * max(dyn) + 1e-12
+
+
+def test_perf_overhead_bounds():
+    """Paper Fig 19: Full < 0.5%; Base worst-case bounded."""
+    for wl_ in paper_suite():
+        reps = evaluate_all(wl_)
+        base = reps["NoPG"].runtime_s
+        assert reps["ReGate-Full"].runtime_s / base - 1 < 0.005
+        assert reps["ReGate-Base"].runtime_s / base - 1 < 0.05
+        assert reps["Ideal"].runtime_s == pytest.approx(base)
+
+
+def test_setpm_rate_below_bound():
+    """Paper Fig 20: compiler never exceeds 1000/BET_vu = 31 per 1k cyc."""
+    npu = get_npu("NPU-D")
+    for wl_ in paper_suite():
+        r = evaluate(wl_, npu, "ReGate-Full")
+        assert r.setpm_per_1k_cycles(npu) < 31.0
+
+
+def test_savings_in_paper_band():
+    """Fig 17: ReGate-Full savings 8.5-32.8% across the suite (we allow a
+    modestly wider calibration band and check the average)."""
+    vals = [savings_vs_nopg(evaluate_all(w))["ReGate-Full"]
+            for w in paper_suite()]
+    assert 0.05 < min(vals) < 0.20
+    assert 0.25 < max(vals) < 0.40
+    avg = sum(vals) / len(vals)
+    assert 0.10 < avg < 0.25
+
+
+def test_static_fraction_in_paper_band():
+    """Fig 3: busy-chip static energy fraction 30-72%."""
+    for w in paper_suite():
+        sf = evaluate(w, "NPU-D", "NoPG").static_frac
+        assert 0.28 < sf < 0.80, (w.name, sf)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.01, 0.5), st.floats(0.5, 4.0))
+def test_sensitivity_monotonic(leak, delay_scale):
+    """Higher gated leakage and longer delays never increase savings."""
+    w = llm_workload("llama3-8b", "decode", batch=8, n_chips=1)
+    base = savings_vs_nopg(evaluate_all(w))["ReGate-Full"]
+    knobs = PolicyKnobs(leak_off_logic=leak, leak_sram_off=leak,
+                        leak_sram_sleep=max(leak, 0.25),
+                        delay_scale=delay_scale)
+    sv = savings_vs_nopg(evaluate_all(w, knobs=knobs))["ReGate-Full"]
+    if leak >= 0.03 and delay_scale >= 1.0:
+        assert sv <= base + 1e-6
+
+
+def test_generational_claims():
+    """Derived peak FLOPs reproduce published TPU peaks (paper Table 2)."""
+    assert round(NPUS["NPU-A"].sa_flops / 1e12) == 46
+    assert round(NPUS["NPU-B"].sa_flops / 1e12) == 123
+    assert round(NPUS["NPU-C"].sa_flops / 1e12) == 275
+    assert round(NPUS["NPU-D"].sa_flops / 1e12) == 459
+    # static shares match paper Fig 3 ranges
+    for gen, shares in STATIC_SHARES.items():
+        assert 0.08 <= shares["sa"] <= 0.14
+        assert 0.019 <= shares["vu"] <= 0.056
+        assert 0.154 <= shares["sram"] <= 0.244
+        assert 0.09 <= shares["hbm"] <= 0.224
+        assert 0.053 <= shares["ici"] <= 0.12
+        assert 0.39 <= shares["other"] <= 0.458
+        assert abs(sum(shares.values()) - 1.0) < 1e-6

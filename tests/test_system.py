@@ -1,0 +1,70 @@
+"""End-to-end system behaviour: train loop with checkpoint/restart and
+failure injection; batched serving; HLO analyzer on a live compile."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import TrainLoopConfig, run
+
+
+def test_train_loop_runs_and_improves(tmp_path):
+    out = run(TrainLoopConfig(arch="qwen2.5-3b", steps=6, seq_len=32,
+                              global_batch=4, ckpt_dir=str(tmp_path),
+                              checkpoint_every=3, log_every=100))
+    assert len(out["losses"]) == 6
+    assert all(np.isfinite(v) for v in out["losses"])
+
+
+def test_failure_injection_and_bitexact_resume(tmp_path):
+    cfg = TrainLoopConfig(arch="mamba2-780m", steps=8, seq_len=32,
+                          global_batch=4, ckpt_dir=str(tmp_path),
+                          checkpoint_every=2, log_every=100)
+    full = run(TrainLoopConfig(**{**vars(cfg), "ckpt_dir": ""}))
+    with pytest.raises(RuntimeError, match="injected failure"):
+        run(TrainLoopConfig(**{**vars(cfg), "fail_at_step": 5}))
+    resumed = run(cfg)  # resumes from step 4 checkpoint
+    # the resumed run's tail losses match the uninterrupted run bit-exactly
+    np.testing.assert_allclose(resumed["losses"][-3:], full["losses"][-3:],
+                               rtol=0, atol=0)
+
+
+def test_batched_serving():
+    from repro.launch.serve import Server
+    srv = Server("qwen2.5-3b", batch=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, srv.cfg.vocab_size, (2, 8), dtype=np.int32)
+    toks = srv.generate(prompts, 4)
+    assert toks.shape == (2, 4)
+    assert (toks >= 0).all() and (toks < srv.cfg.vocab_padded).all()
+
+
+def test_grad_compression_changes_nothing_structural():
+    """bf16 grad compression: same convergence direction, different bytes
+    on the wire (the dry-run measures the bytes; here we check the step
+    still trains)."""
+    out = run(TrainLoopConfig(arch="qwen2.5-3b", steps=3, seq_len=32,
+                              global_batch=4, grad_compression="bf16",
+                              log_every=100))
+    assert all(np.isfinite(v) for v in out["losses"])
+
+
+def test_hlo_analyzer_on_live_compile():
+    """Scaled flops from the analyzer == trip count x per-iteration dots."""
+    from repro.core.hlo import analyze
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)).compile()
+    costs = analyze(comp.as_text())
+    assert costs.flops == pytest.approx(7 * 2 * 64 ** 3, rel=0.01)
+    # xla's own cost analysis counts the body once (the bug we fix)
+    assert comp.cost_analysis()["flops"] < costs.flops / 3
