@@ -1,19 +1,28 @@
 """One benchmark per paper table/figure. Each returns rows of
-(name, value, derived-note); benchmarks/run.py prints them as CSV."""
+(name, value, derived-note); benchmarks/run.py prints them as CSV.
+
+The figure benchmarks run on the columnar engine: per-workload service
+times come from ``compile_trace`` + ``trace_times`` and the policy/knob
+cross products go through ``repro.core.sweep.sweep``.
+"""
 from __future__ import annotations
 
 import statistics
 from typing import Callable
 
+import numpy as np
+
 from repro.core.carbon import (EMBODIED_KG, optimal_lifespan, yearly_carbon)
 from repro.core.hw import NPUS, get_npu
 from repro.core.isa import VLIWTimeline, fig15_program
-from repro.core.opgen import (diffusion_workload, dlrm_workload,
-                              llm_workload, paper_suite)
+from repro.core.opgen import (compile_trace, diffusion_workload,
+                              dlrm_workload, llm_workload, paper_suite)
 from repro.core.policies import (POLICIES, PolicyKnobs, evaluate,
-                                 evaluate_all, op_times, savings_vs_nopg)
+                                 evaluate_all, op_times, savings_vs_nopg,
+                                 trace_times)
 from repro.core.power import PowerModel
 from repro.core.sa_gating import gating_stats, spatial_efficiency
+from repro.core.sweep import group_by, sweep, with_savings
 
 Row = tuple  # (name, value, note)
 
@@ -76,14 +85,13 @@ def fig3_energy_breakdown() -> list[Row]:
 @bench
 def fig4_sa_temporal_utilization() -> list[Row]:
     out = []
+    npu = get_npu("NPU-D")
     for wl in paper_suite():
-        npu = get_npu("NPU-D")
-        busy = idle = 0.0
-        for op in wl.ops:
-            t = op_times(op, npu)
-            busy += t["sa"] * op.count
-            idle += (t["_dur"] - t["sa"]) * op.count
-        out.append((f"sa_util/{wl.name}", round(busy / (busy + idle), 3),
+        tr = compile_trace(wl)
+        tm = trace_times(tr, npu)
+        busy = float((tm["sa"] * tr.count).sum())
+        tot = float((tm["dur"] * tr.count).sum())
+        out.append((f"sa_util/{wl.name}", round(busy / tot, 3),
                     "active cycles / total"))
     return out
 
@@ -107,11 +115,10 @@ def fig6_vu_utilization() -> list[Row]:
     out = []
     npu = get_npu("NPU-D")
     for wl in paper_suite():
-        busy = tot = 0.0
-        for op in wl.ops:
-            t = op_times(op, npu)
-            busy += t["vu"] * op.count
-            tot += t["_dur"] * op.count
+        tr = compile_trace(wl)
+        tm = trace_times(tr, npu)
+        busy = float((tm["vu"] * tr.count).sum())
+        tot = float((tm["dur"] * tr.count).sum())
         out.append((f"vu_util/{wl.name}", round(busy / tot, 3),
                     "paper: <60% everywhere"))
     return out
@@ -119,12 +126,14 @@ def fig6_vu_utilization() -> list[Row]:
 
 @bench
 def fig7_sram_demand() -> list[Row]:
+    """Percentiles over the EXECUTED op stream: each op weighted by its
+    repetition count (the columnar trace makes the expansion trivial)."""
     out = []
-    npu = get_npu("NPU-D")
     for wl in paper_suite():
-        dem = [op.sram_demand for op in wl.ops for _ in range(1)]
-        mx = max(dem) / 2 ** 20
-        med = statistics.median(dem) / 2 ** 20
+        tr = compile_trace(wl)
+        dem = np.repeat(tr.sram_demand, tr.count.astype(np.int64))
+        mx = float(dem.max()) / 2 ** 20
+        med = float(np.median(dem)) / 2 ** 20
         out.append((f"sram_mb/{wl.name}",
                     f"med={med:.0f} max={mx:.0f}",
                     "paper: DLRM <= 8MB, compute-bound large"))
@@ -136,9 +145,11 @@ def fig8_ici_utilization() -> list[Row]:
     out = []
     npu = get_npu("NPU-D")
     for wl in paper_suite():
-        coll = sum(op_times(op, npu)["_dur"] * op.count
-                   for op in wl.ops if op.collective)
-        tot = sum(op_times(op, npu)["_dur"] * op.count for op in wl.ops)
+        tr = compile_trace(wl)
+        tm = trace_times(tr, npu)
+        durn = tm["dur"] * tr.count
+        coll = float(durn[tr.collective].sum())
+        tot = float(durn.sum())
         out.append((f"ici_noncollective_frac/{wl.name}",
                     round(1 - coll / tot, 3), "paper: 1-100%, avg 67%"))
     return out
@@ -149,11 +160,10 @@ def fig9_hbm_utilization() -> list[Row]:
     out = []
     npu = get_npu("NPU-D")
     for wl in paper_suite():
-        busy = tot = 0.0
-        for op in wl.ops:
-            t = op_times(op, npu)
-            busy += t["hbm"] * op.count
-            tot += t["_dur"] * op.count
+        tr = compile_trace(wl)
+        tm = trace_times(tr, npu)
+        busy = float((tm["hbm"] * tr.count).sum())
+        tot = float((tm["dur"] * tr.count).sum())
         out.append((f"hbm_idle_frac/{wl.name}", round(1 - busy / tot, 3),
                     "paper: 64-99% idle for compute-bound"))
     return out
@@ -162,15 +172,16 @@ def fig9_hbm_utilization() -> list[Row]:
 @bench
 def fig17_energy_savings() -> list[Row]:
     out = []
+    recs = with_savings(sweep(paper_suite()))
     per_policy: dict[str, list[float]] = {p: [] for p in POLICIES}
-    for wl in paper_suite():
-        sv = savings_vs_nopg(evaluate_all(wl))
-        for p in POLICIES[1:]:
-            per_policy[p].append(sv[p])
-            out.append((f"save/{wl.name}/{p}", round(sv[p], 4), ""))
+    for r in recs:
+        if r["policy"] == "NoPG":
+            continue
+        per_policy[r["policy"]].append(r["savings"])
+        out.append((f"save/{r['workload']}/{r['policy']}",
+                    round(r["savings"], 4), ""))
     for p in POLICIES[1:]:
-        v = per_policy[p]
-        out.append((f"save/avg/{p}", round(statistics.mean(v), 4),
+        out.append((f"save/avg/{p}", round(statistics.mean(per_policy[p]), 4),
                     "paper Full: 0.085-0.328 avg 0.155"))
     return out
 
@@ -178,11 +189,12 @@ def fig17_energy_savings() -> list[Row]:
 @bench
 def fig18_power() -> list[Row]:
     out = []
-    for wl in paper_suite():
-        reps = evaluate_all(wl)
-        base = reps["NoPG"].avg_power_w
-        full = reps["ReGate-Full"].avg_power_w
-        out.append((f"avg_power_w/{wl.name}",
+    recs = sweep(paper_suite(), policies=("NoPG", "ReGate-Full"))
+    for (wl_name,), rows in group_by(recs, "workload").items():
+        by_p = {r["policy"]: r for r in rows}
+        base = by_p["NoPG"]["avg_power_w"]
+        full = by_p["ReGate-Full"]["avg_power_w"]
+        out.append((f"avg_power_w/{wl_name}",
                     f"nopg={base:.0f} full={full:.0f}",
                     f"-{(1-full/base)*100:.1f}%"))
     return out
@@ -192,12 +204,12 @@ def fig18_power() -> list[Row]:
 def fig19_perf_overhead() -> list[Row]:
     out = []
     worst = {p: 0.0 for p in POLICIES}
-    for wl in paper_suite():
-        reps = evaluate_all(wl)
-        base = reps["NoPG"].runtime_s
+    recs = sweep(paper_suite())
+    for (wl_name,), rows in group_by(recs, "workload").items():
+        by_p = {r["policy"]: r for r in rows}
+        base = by_p["NoPG"]["runtime_s"]
         for p in ("ReGate-Base", "ReGate-HW", "ReGate-Full"):
-            ov = reps[p].runtime_s / base - 1
-            worst[p] = max(worst[p], ov)
+            worst[p] = max(worst[p], by_p[p]["runtime_s"] / base - 1)
     for p in ("ReGate-Base", "ReGate-HW", "ReGate-Full"):
         out.append((f"overhead_max/{p}", round(worst[p], 5),
                     "paper: Base<=4.6% HW<=0.6% Full<=0.44%"))
@@ -206,12 +218,10 @@ def fig19_perf_overhead() -> list[Row]:
 
 @bench
 def fig20_setpm_rate() -> list[Row]:
-    npu = get_npu("NPU-D")
     out = []
-    for wl in paper_suite():
-        r = evaluate(wl, npu, "ReGate-Full")
-        out.append((f"setpm_per_1k/{wl.name}",
-                    round(r.setpm_per_1k_cycles(npu), 2),
+    for r in sweep(paper_suite(), policies=("ReGate-Full",)):
+        out.append((f"setpm_per_1k/{r['workload']}",
+                    round(r["setpm_per_1k_cycles"], 2),
                     "bound: 31 (=1000/BET_vu)"))
     # instruction-level (paper Fig 15 pattern)
     prog = fig15_program(8, with_setpm=True)
@@ -225,13 +235,16 @@ def fig20_setpm_rate() -> list[Row]:
 @bench
 def fig21_leakage_sensitivity() -> list[Row]:
     out = []
-    for leak in (0.03, 0.1, 0.2):
-        knobs = PolicyKnobs(leak_off_logic=leak,
-                            leak_sram_sleep=max(0.25, leak * 2),
-                            leak_sram_off=leak / 10)
-        vals = [savings_vs_nopg(evaluate_all(w, knobs=knobs))["ReGate-Full"]
-                for w in paper_suite()]
-        out.append((f"save_full_avg/leak={leak}",
+    leaks = (0.03, 0.1, 0.2)
+    grid = [PolicyKnobs(leak_off_logic=leak,
+                        leak_sram_sleep=max(0.25, leak * 2),
+                        leak_sram_off=leak / 10) for leak in leaks]
+    recs = with_savings(sweep(paper_suite(),
+                              policies=("NoPG", "ReGate-Full"),
+                              knob_grid=grid))
+    for (ki,), rows in group_by(recs, "knob_idx").items():
+        vals = [r["savings"] for r in rows if r["policy"] == "ReGate-Full"]
+        out.append((f"save_full_avg/leak={leaks[ki]}",
                     round(statistics.mean(vals), 4),
                     "paper: 4.6-16.4% at worst setting"))
     return out
@@ -240,15 +253,18 @@ def fig21_leakage_sensitivity() -> list[Row]:
 @bench
 def fig22_delay_sensitivity() -> list[Row]:
     out = []
-    for scale in (0.5, 1.0, 2.0, 4.0):
-        knobs = PolicyKnobs(delay_scale=scale)
-        sv, ov = [], []
-        for w in paper_suite():
-            reps = evaluate_all(w, knobs=knobs)
-            sv.append(savings_vs_nopg(reps)["ReGate-Full"])
-            ov.append(reps["ReGate-Full"].runtime_s
-                      / reps["NoPG"].runtime_s - 1)
-        out.append((f"delay_x{scale}",
+    scales = (0.5, 1.0, 2.0, 4.0)
+    grid = [PolicyKnobs(delay_scale=s) for s in scales]
+    recs = with_savings(sweep(paper_suite(),
+                              policies=("NoPG", "ReGate-Full"),
+                              knob_grid=grid))
+    for (ki,), rows in group_by(recs, "knob_idx").items():
+        full = [r for r in rows if r["policy"] == "ReGate-Full"]
+        nopg = {r["workload"]: r for r in rows if r["policy"] == "NoPG"}
+        sv = [r["savings"] for r in full]
+        ov = [r["runtime_s"] / nopg[r["workload"]]["runtime_s"] - 1
+              for r in full]
+        out.append((f"delay_x{scales[ki]}",
                     f"save={statistics.mean(sv):.4f} "
                     f"ov={statistics.mean(ov):.5f}",
                     "longer delays: fewer gating opportunities"))
@@ -258,9 +274,10 @@ def fig22_delay_sensitivity() -> list[Row]:
 @bench
 def fig23_generations() -> list[Row]:
     out = []
-    for gen in NPUS:
-        vals = [savings_vs_nopg(evaluate_all(w, npu=gen))["ReGate-Full"]
-                for w in paper_suite()]
+    recs = with_savings(sweep(paper_suite(), npus=tuple(NPUS),
+                              policies=("NoPG", "ReGate-Full")))
+    for (gen,), rows in group_by(recs, "npu").items():
+        vals = [r["savings"] for r in rows if r["policy"] == "ReGate-Full"]
         out.append((f"save_full_avg/{gen}", round(statistics.mean(vals), 4),
                     "paper: larger units on E -> larger savings"))
     return out

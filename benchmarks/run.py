@@ -2,10 +2,16 @@
 dry-run roofline table. Prints ``name,value,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig17,fig19] [--list]
+                                          [--json BENCH_figures.json]
+
+``--json`` additionally writes a machine-readable artifact with every
+row plus per-benchmark wall times, so the perf trajectory of the
+simulator itself lands in version-controlled ``BENCH_*.json`` files.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,6 +21,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows + timings to this JSON file")
     args = ap.parse_args(argv)
 
     from benchmarks.figures import REGISTRY
@@ -33,18 +41,31 @@ def main(argv=None) -> int:
     filters = args.only.split(",") if args.only else None
     print("name,value,derived")
     failures = 0
+    t_start = time.time()
+    artifact: dict = {"benchmarks": {}, "errors": {}}
     for name, fn in benches.items():
         if filters and not any(f in name for f in filters):
             continue
         t0 = time.time()
         try:
+            rows = []
             for row in fn():
                 key, val, note = (list(row) + ["", ""])[:3]
                 print(f"{key},{val},{note}")
-            print(f"_timing/{name},{time.time()-t0:.2f}s,")
+                rows.append({"name": key, "value": val, "note": note})
+            dt = time.time() - t0
+            print(f"_timing/{name},{dt:.2f}s,")
+            artifact["benchmarks"][name] = {"wall_s": round(dt, 4),
+                                            "rows": rows}
         except Exception as e:  # noqa
             failures += 1
             print(f"_error/{name},{type(e).__name__}: {e},")
+            artifact["errors"][name] = f"{type(e).__name__}: {e}"
+    artifact["total_wall_s"] = round(time.time() - t_start, 4)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"_json/{args.json},written,")
     return 1 if failures else 0
 
 

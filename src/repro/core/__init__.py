@@ -3,14 +3,21 @@
 hw/power      — NPU-A..E specs (Table 2/3) + calibrated power model
 sa_gating     — PE-level spatial SA gating (Figs 10-13)
 isa/passes    — setpm ISA extension + compiler passes (Figs 14-15, §4.3)
-opgen/policies— operator traces + the five designs (§6)
+opgen/policies— operator traces, columnar trace compilation, and the five
+                designs (§6): vectorized ``evaluate`` + scalar
+                ``evaluate_reference`` oracle
+sweep         — batched design-space sweeps (workloads × npus × policies
+                × knob grids) over the columnar engine
 carbon        — operational/embodied carbon (Figs 24-25)
 slo           — SLO-constrained config sweep (Fig 2)
 hlo/roofline  — compiled-HLO cost extraction for the dry-run
 """
 from repro.core.hw import NPUS, TARGET, get_npu
+from repro.core.opgen import compile_trace
 from repro.core.policies import POLICIES, evaluate, evaluate_all, \
-    savings_vs_nopg
+    evaluate_reference, savings_vs_nopg
+from repro.core.sweep import sweep
 
-__all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "evaluate",
-           "evaluate_all", "savings_vs_nopg"]
+__all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "compile_trace",
+           "evaluate", "evaluate_all", "evaluate_reference",
+           "savings_vs_nopg", "sweep"]

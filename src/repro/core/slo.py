@@ -15,7 +15,7 @@ from typing import Callable, Optional
 
 from repro.core.hw import NPUS, get_npu
 from repro.core.opgen import Workload, llm_workload
-from repro.core.policies import evaluate
+from repro.core.sweep import sweep
 
 
 @dataclass(frozen=True)
@@ -32,22 +32,35 @@ class SweepPoint:
         return self.work / self.energy_j  # work per J
 
 
+def _work_units(phase: str, batch: int) -> float:
+    if phase == "train":
+        return batch * 4096.0          # tokens per step
+    return float(batch)                # requests (prefill) / tokens (decode)
+
+
+def _measure_batch(model: str, phase: str, npu: str,
+                   configs: list[tuple[int, int]]) -> list[SweepPoint]:
+    """Evaluate all (n_chips, batch) candidates through one sweep() call
+    (the engine reuses each compiled trace across cells)."""
+    wls = []
+    for n_chips, batch in configs:
+        tp = min(n_chips, 8)
+        dp = max(1, n_chips // tp)
+        wls.append(llm_workload(model, phase, batch=batch, n_chips=n_chips,
+                                tp=tp, dp=dp))
+    recs = sweep(wls, npus=(npu,), policies=("NoPG",))
+    out = []
+    for (n_chips, batch), rec in zip(configs, recs):
+        work = _work_units(phase, batch)
+        out.append(SweepPoint(npu, n_chips, batch,
+                              work / rec["runtime_s"],
+                              rec["total_j"] * n_chips, work))
+    return out
+
+
 def _measure(model: str, phase: str, npu: str, n_chips: int,
              batch: int) -> SweepPoint:
-    tp = min(n_chips, 8)
-    dp = max(1, n_chips // tp)
-    wl = llm_workload(model, phase, batch=batch, n_chips=n_chips,
-                      tp=tp, dp=dp)
-    rep = evaluate(wl, npu, "NoPG")
-    if phase == "train":
-        work = batch * 4096.0          # tokens per step
-    elif phase == "prefill":
-        work = float(batch)            # requests
-    else:
-        work = float(batch)            # tokens per decode step
-    perf = work / rep.runtime_s
-    return SweepPoint(npu, n_chips, batch, perf,
-                      rep.total_j * n_chips, work)
+    return _measure_batch(model, phase, npu, [(n_chips, batch)])[0]
 
 
 def hbm_fits(model: str, npu: str, n_chips: int, batch: int,
@@ -84,15 +97,13 @@ def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
 
     out: dict = {"_slo": slo_perf_per_chip}
     for gen in gens:
+        configs = [(n, b) for n in chip_counts for b in batches
+                   if hbm_fits(model, gen, n, b, phase)]
         best: Optional[SweepPoint] = None
-        for n in chip_counts:
-            for b in batches:
-                if not hbm_fits(model, gen, n, b, phase):
-                    continue
-                pt = _measure(model, phase, gen, n, b)
-                if pt.perf / pt.n_chips < slo_perf_per_chip:
-                    continue
-                if best is None or pt.efficiency > best.efficiency:
-                    best = pt
+        for pt in _measure_batch(model, phase, gen, configs):
+            if pt.perf / pt.n_chips < slo_perf_per_chip:
+                continue
+            if best is None or pt.efficiency > best.efficiency:
+                best = pt
         out[gen] = best
     return out

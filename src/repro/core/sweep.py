@@ -1,0 +1,97 @@
+"""Batched design-space sweeps over the columnar policy engine.
+
+``sweep`` evaluates the cross product ``workloads × npus × policies ×
+knob_grid`` and returns a flat record table (one dict per cell) — the
+common substrate for the figure benchmarks (Figs 17–23), the SLO
+configuration search, and CompPow-style what-if exploration. Because the
+engine compiles each workload to ``TraceArrays`` once and caches the
+per-NPU service times on the trace, the marginal cost of an extra policy
+or knob setting is a handful of array passes, not a re-walk of the op
+stream.
+
+Records are emitted in deterministic order: workload-major, then NPU,
+then policy, then knob index.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Sequence
+
+from repro.core.hw import NPUSpec, get_npu
+from repro.core.opgen import Workload, compile_trace
+from repro.core.policies import (POLICIES, EnergyReport, PolicyKnobs,
+                                 evaluate)
+from repro.core.power import COMPONENTS
+
+
+def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
+             npu: NPUSpec) -> dict:
+    rec = {
+        "workload": rep.workload,
+        "npu": rep.npu,
+        "policy": rep.policy,
+        "knob_idx": knob_idx,
+        "delay_scale": knobs.delay_scale,
+        "leak_off_logic": knobs.leak_off_logic,
+        "leak_sram_sleep": knobs.leak_sram_sleep,
+        "leak_sram_off": knobs.leak_sram_off,
+        "runtime_s": rep.runtime_s,
+        "total_j": rep.total_j,
+        "static_total_j": sum(rep.static_j.values()),
+        "dynamic_total_j": sum(rep.dynamic_j.values()),
+        "static_frac": rep.static_frac,
+        "avg_power_w": rep.avg_power_w,
+        "setpm_count": rep.setpm_count,
+        "setpm_per_1k_cycles": rep.setpm_per_1k_cycles(npu),
+        "wake_events": sum(rep.wake_events.values()),
+    }
+    for c in COMPONENTS:
+        rec[f"static_j_{c}"] = rep.static_j[c]
+        rec[f"dynamic_j_{c}"] = rep.dynamic_j[c]
+    return rec
+
+
+def sweep(workloads: Sequence[Workload] | Workload,
+          npus: Iterable[NPUSpec | str] = ("NPU-D",),
+          policies: Iterable[str] = POLICIES,
+          knob_grid: Optional[Sequence[PolicyKnobs]] = None) -> list[dict]:
+    """Evaluate every (workload, npu, policy, knobs) cell; flat records."""
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    if knob_grid is None:
+        knob_grid = [PolicyKnobs()]
+    npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
+    records: list[dict] = []
+    for wl in workloads:
+        compile_trace(wl)  # compile once up front (cached by identity)
+        for npu in npu_specs:
+            for policy in policies:
+                for ki, knobs in enumerate(knob_grid):
+                    rep = evaluate(wl, npu, policy, knobs)
+                    records.append(_flatten(rep, knobs, ki, npu))
+    return records
+
+
+def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
+    """Attach ``savings`` (1 - total_j/baseline_total_j) to each record,
+    matching records to their baseline within the same
+    (workload, npu, knob_idx) cell. Baseline rows get savings 0.0; cells
+    without a baseline row get savings None."""
+    base: dict[tuple, float] = {}
+    for r in records:
+        if r["policy"] == baseline:
+            base[(r["workload"], r["npu"], r["knob_idx"])] = r["total_j"]
+    out = []
+    for r in records:
+        b = base.get((r["workload"], r["npu"], r["knob_idx"]))
+        r = dict(r)
+        r["savings"] = None if b is None else 1.0 - r["total_j"] / b
+        out.append(r)
+    return out
+
+
+def group_by(records: list[dict], *keys: str) -> dict[tuple, list[dict]]:
+    """Group records by the given columns, preserving record order."""
+    out: dict[tuple, list[dict]] = {}
+    for r in records:
+        out.setdefault(tuple(r[k] for k in keys), []).append(r)
+    return out

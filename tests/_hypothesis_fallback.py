@@ -1,0 +1,31 @@
+"""Degraded stand-in for ``hypothesis`` so the suite collects everywhere.
+
+When hypothesis is installed the test modules import the real thing; when
+it is missing they fall back to these shims, which turn every
+``@given``-decorated property test into a ``pytest.skip`` instead of a
+collection error. Strategy constructors accept anything and return None —
+they are only ever passed back into ``given``.
+"""
+import pytest
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        def _strategy(*args, **kwargs):
+            return None
+        return _strategy
+
+
+st = _Strategies()
+
+
+def given(*args, **kwargs):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*args, **kwargs):
+    def deco(fn):
+        return fn
+    return deco

@@ -6,3 +6,5 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make _hypothesis_fallback importable regardless of pytest import mode
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,6 +1,9 @@
 """ISA extension (setpm / VLIW timeline) + compiler pass tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # degrade: property tests skip, rest still run
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.hw import SRAM_SEGMENT_BYTES, get_npu
 from repro.core.isa import (Instr, PMode, VLIWTimeline, fig15_program,
