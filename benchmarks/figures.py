@@ -18,11 +18,11 @@ from repro.core.isa import VLIWTimeline, fig15_program
 from repro.core.opgen import (compile_trace, diffusion_workload,
                               dlrm_workload, llm_workload, paper_suite)
 from repro.core.policies import (POLICIES, PolicyKnobs, evaluate,
-                                 evaluate_all, op_times, savings_vs_nopg,
-                                 trace_times)
+                                 evaluate_all, trace_times)
 from repro.core.power import PowerModel
 from repro.core.sa_gating import gating_stats, spatial_efficiency
-from repro.core.sweep import group_by, sweep, with_savings
+from repro.core.sweep import (group_by, sweep, sweep_program_plane,
+                              with_savings)
 
 Row = tuple  # (name, value, note)
 
@@ -229,6 +229,32 @@ def fig20_setpm_rate() -> list[Row]:
     out.append(("setpm_per_1k/fig15_micro",
                 round(res.setpm_executed / res.cycles * 1e3, 1),
                 "VLIW timeline"))
+    return out
+
+
+@bench
+def program_plane_crossval() -> list[Row]:
+    """Program plane vs closed-form sw policy (ISSUE 2 tentpole): the
+    suite lowered to per-unit cycle timelines, §4.3-instrumented, run on
+    the event-driven executor; per-workload worst deviation of the
+    per-component gated-cycle fractions on NPU-D (all generations are
+    covered by tests/test_program_plane_crossval.py)."""
+    out = []
+    worst = 0.0
+    for r in sweep_program_plane(paper_suite(), npus=("NPU-D",)):
+        dev = max(r[f"gated_frac_absdiff_{c}"]
+                  for c in ("sa", "vu", "hbm", "ici", "sram"))
+        worst = max(worst, dev, r["runtime_rel_err"])
+        out.append((
+            f"crossval/{r['workload']}", round(dev, 6),
+            f"max |d gated_frac|; rt_err {r['runtime_rel_err']:.1e}; "
+            f"setpm vu {r['setpm_prog_vu']:.0f}/"
+            f"{r['setpm_policy_vu']:.0f} "
+            f"sram {r['setpm_prog_sram']:.0f}/"
+            f"{r['setpm_policy_sram']:.0f} (prog/policy); "
+            f"{r['n_events']} events"))
+    out.append(("crossval/suite_max_dev", round(worst, 6),
+                "tolerance 0.005 — EXPERIMENTS.md §Program-plane"))
     return out
 
 

@@ -4,7 +4,9 @@ Times the batched design-space sweep path — ``paper_suite()`` × all 5
 policies × a 4-point knob grid on NPU-D — on both engines:
 
 * vectorized: ``repro.core.sweep.sweep`` over the columnar engine
-  (includes trace compilation, which the identity cache amortizes);
+  (trace compilation is excluded from the timing: the identity cache is
+  warm after the first pass and best-of-N takes the minimum — in
+  production one compile serves every sweep cell);
 * reference:  the original scalar ``evaluate_reference`` per-op loop.
 
 Throughput is executed op-instances per second (trace length with
@@ -37,10 +39,9 @@ def run(out_path: str = "BENCH_policy_engine.json",
         reps_vectorized: int = 3) -> dict:
     suite = paper_suite()
     n_cells = len(suite) * len(POLICIES) * len(KNOB_GRID)
-    ops_per_pass = sum(compile_trace(wl).n_instances for wl in suite) \
-        * len(POLICIES) * len(KNOB_GRID)
 
-    # --- vectorized sweep path (best of N passes; first pass compiles) ---
+    # --- vectorized sweep path (best of N passes; compile cost lands on
+    # the first pass only and is excluded by the min) ---
     t_vec = float("inf")
     for _ in range(reps_vectorized):
         t0 = time.perf_counter()
@@ -58,6 +59,8 @@ def run(out_path: str = "BENCH_policy_engine.json",
                 evaluate_reference(wl, npu, policy, knobs)
     t_ref = time.perf_counter() - t0
 
+    ops_per_pass = sum(compile_trace(wl).n_instances for wl in suite) \
+        * len(POLICIES) * len(KNOB_GRID)
     result = {
         "workloads": len(suite),
         "policies": len(POLICIES),

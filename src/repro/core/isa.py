@@ -1,4 +1,4 @@
-"""NPU power-management ISA extension + VLIW timeline executor (paper §4.2).
+"""NPU power-management ISA extension + VLIW timeline executors (paper §4.2).
 
 ``setpm`` (set power mode) — paper Fig 14:
   * variant 1 (SRAM): ``setpm %start, %end, sram, <mode>`` — gates a
@@ -7,11 +7,23 @@
     the bitmap (register or immediate) selects multiple units at once so a
     single misc-slot instruction reconfigures several FUs in one cycle.
 
-The cycle-level executor reproduces the paper's Fig 15 example: it tracks
-per-FU power state, enforces the "power-gated component is a structural
-hazard" rule (instructions stall until the unit is READY), and accounts
-static energy per cycle per state. Used by the microbenchmarks and the
-property tests; workload-scale energy uses the op-level engine in
+Two executors share one machine model (per-FU power state, the
+"power-gated component is a structural hazard" rule, per-cycle static
+accounting):
+
+* ``VLIWTimeline`` — the cycle-stepper reference: one bundle per cycle,
+  O(cycles). Reproduces the paper's Fig 15 example and anchors the
+  property tests.
+* ``EventTimeline`` — the event-driven (interval-based) executor for
+  workload-scale programs: the program is a SPARSE list of
+  ``(cycle, bundle)`` events; gaps between events are closed-form
+  (idle-detection crossings computed analytically per FU), so cost is
+  O(events), not O(cycles). ``tests/test_event_executor.py`` holds it to
+  exact equality against the cycle-stepper on the microbenchmarks and on
+  sampled workload-scale programs (see ``expand_events``).
+
+Workload-scale programs come out of ``repro.core.lowering``; energy at
+that scale cross-validates against the closed-form engine in
 ``repro.core.policies``.
 """
 from __future__ import annotations
@@ -34,7 +46,7 @@ class PMode(enum.Enum):
 class Instr:
     """One VLIW slot operation."""
     opcode: str               # push | pop | vadd | vmul | dma | sync | setpm
-    unit: str                 # "sa0".."vu3" | "dma" | "ici" | "misc"
+    unit: str                 # "sa0".."vu3" | "dma0" | "ici0" | "misc"
     latency: int = 1
     # setpm fields (paper Fig 14)
     pm_fu_type: Optional[str] = None    # sa | vu | sram | hbm | ici
@@ -49,9 +61,18 @@ def setpm(fu_type: str, bitmap: int, mode: PMode,
                  pm_mode=mode, pm_range=sram_range)
 
 
+def unit_index(name: str) -> int:
+    """Bitmap index of a FU instance: its trailing digits ("vu2" -> 2,
+    "dma0"/"dma" -> 0)."""
+    i = len(name)
+    while i > 0 and name[i - 1].isdigit():
+        i -= 1
+    return int(name[i:]) if i < len(name) else 0
+
+
 @dataclass
 class FUState:
-    kind: str            # sa | vu
+    kind: str            # sa | vu | hbm | ici
     powered: bool = True
     mode: PMode = PMode.AUTO
     ready_at: int = 0    # cycle when wake-up completes
@@ -79,92 +100,117 @@ class ExecResult:
         return e
 
 
+# gating-parameter table keys per FU kind (paper Table 3)
+DELAY_KEYS = {"sa": "sa_full", "vu": "vu", "hbm": "hbm", "ici": "ici"}
+
+
 class VLIWTimeline:
-    """Executes a bundle list. Each cycle may issue one bundle (a dict
-    unit->Instr, plus at most one misc-slot setpm)."""
+    """Cycle-stepper reference executor. Each cycle may issue one bundle
+    (a dict unit->Instr, plus at most one misc-slot setpm)."""
 
     def __init__(self, npu: NPUSpec | str = "NPU-D", n_sa: int = 2,
-                 n_vu: int = 2, hw_auto_gating: bool = True):
+                 n_vu: int = 2, hw_auto_gating: bool = True,
+                 extra_units: Optional[dict[str, str]] = None,
+                 delay_keys: Optional[dict[str, str]] = None,
+                 initial_modes: Optional[dict[str, PMode]] = None):
+        """``extra_units``: name -> kind for units beyond the SA/VU files
+        (e.g. {"dma0": "hbm", "ici0": "ici"}). ``delay_keys`` overrides
+        the kind -> gating-table key map (e.g. sa -> "sa_pe" when the
+        SA gates at PE granularity). ``initial_modes``: per-unit initial
+        power mode — software-managed units start in ON (hardware
+        idle-detection disabled; setpm drives them)."""
         self.npu = get_npu(npu) if isinstance(npu, str) else npu
         self.fus: dict[str, FUState] = {}
         for i in range(n_sa):
             self.fus[f"sa{i}"] = FUState("sa")
         for i in range(n_vu):
             self.fus[f"vu{i}"] = FUState("vu")
+        for name, kind in (extra_units or {}).items():
+            self.fus[name] = FUState(kind)
+        for name, mode in (initial_modes or {}).items():
+            self.fus[name].mode = mode
         self.hw_auto = hw_auto_gating
         self.g = self.npu.gating
+        self.delay_keys = dict(DELAY_KEYS)
+        if delay_keys:
+            self.delay_keys.update(delay_keys)
+        self._stalls = 0
+        self._n_setpm = 0
 
     def _delay(self, kind: str) -> int:
-        return self.g.on_off_delay["sa_full" if kind == "sa" else "vu"]
+        return self.g.on_off_delay[self.delay_keys[kind]]
 
     def _window(self, kind: str) -> int:
-        key = "sa_full" if kind == "sa" else "vu"
+        key = self.delay_keys[kind]
         return max(8, int(self.g.bet[key] * self.g.detection_window_frac))
 
-    def run(self, bundles: Iterable[dict[str, Instr]]) -> ExecResult:
-        t = 0
-        stalls = 0
-        n_setpm = 0
-        for bundle in bundles:
-            # 1) apply setpm from the misc slot (takes effect this cycle)
-            m = bundle.get("misc")
-            if m is not None and m.opcode == "setpm":
-                n_setpm += 1
-                for name, fu in self.fus.items():
-                    if fu.kind != m.pm_fu_type:
-                        continue
-                    idx = int(name[2:])
-                    if not (m.pm_bitmap >> idx) & 1:
-                        continue
-                    fu.mode = m.pm_mode
-                    if m.pm_mode == PMode.OFF:
-                        fu.powered = False
-                    elif m.pm_mode == PMode.ON and not fu.powered:
-                        fu.powered = True
-                        fu.ready_at = t + self._delay(fu.kind)
-                        fu.wake_events += 1
+    # ------------------------------------------------------------------
+    # one-bundle machine step (shared by both executors)
+    # ------------------------------------------------------------------
 
-            # 2) structural hazards: wait for every referenced unit
-            need = [i for u, i in bundle.items() if u != "misc"]
-            start = t
-            for ins in need:
-                fu = self.fus.get(ins.unit)
-                if fu is None:
+    def _step(self, bundle: dict[str, Instr], t: int) -> int:
+        """Execute one bundle at machine time ``t``; returns the new
+        machine time (t + 1 + any dispatch stall)."""
+        # 1) apply setpm from the misc slot (takes effect this cycle)
+        m = bundle.get("misc")
+        if m is not None and m.opcode == "setpm":
+            self._n_setpm += 1
+            for name, fu in self.fus.items():
+                if fu.kind != m.pm_fu_type:
                     continue
-                if not fu.powered:  # auto-wake on dispatch
-                    if fu.mode == PMode.OFF:
-                        # sw said OFF: dispatch overrides (hazard + wake)
-                        pass
+                if not (m.pm_bitmap >> unit_index(name)) & 1:
+                    continue
+                fu.mode = m.pm_mode
+                if m.pm_mode == PMode.OFF:
+                    fu.powered = False
+                elif m.pm_mode == PMode.ON and not fu.powered:
                     fu.powered = True
-                    fu.ready_at = max(t, fu.busy_until) + self._delay(fu.kind)
+                    fu.ready_at = t + self._delay(fu.kind)
                     fu.wake_events += 1
-                start = max(start, fu.ready_at, fu.busy_until)
-            stalls += start - t
 
-            # 3) issue
-            for ins in need:
-                fu = self.fus.get(ins.unit)
-                if fu is None:
-                    continue
-                fu.busy_until = start + ins.latency
-                fu.idle_since = fu.busy_until
-            t = start + 1
+        # 2) structural hazards: wait for every referenced unit
+        need = [i for u, i in bundle.items() if u != "misc"]
+        start = t
+        for ins in need:
+            fu = self.fus.get(ins.unit)
+            if fu is None:
+                continue
+            if not fu.powered:  # auto-wake on dispatch
+                if fu.mode == PMode.OFF:
+                    # sw said OFF: dispatch overrides (hazard + wake)
+                    pass
+                fu.powered = True
+                fu.ready_at = max(t, fu.busy_until) + self._delay(fu.kind)
+                fu.wake_events += 1
+            start = max(start, fu.ready_at, fu.busy_until)
+        self._stalls += start - t
 
-            # 4) hardware auto idle-detection gating
-            if self.hw_auto:
-                for fu in self.fus.values():
-                    if (fu.powered and fu.mode == PMode.AUTO
-                            and t - fu.idle_since >= self._window(fu.kind)
-                            and fu.busy_until <= t):
-                        fu.powered = False
+        # 3) issue
+        for ins in need:
+            fu = self.fus.get(ins.unit)
+            if fu is None:
+                continue
+            fu.busy_until = start + ins.latency
+            fu.idle_since = fu.busy_until
+        t = start + 1
 
-            # 5) accounting
+        # 4) hardware auto idle-detection gating
+        if self.hw_auto:
             for fu in self.fus.values():
-                if fu.powered:
-                    fu.on_cycles += 1
-                else:
-                    fu.gated_cycles += 1
+                if (fu.powered and fu.mode == PMode.AUTO
+                        and t - fu.idle_since >= self._window(fu.kind)
+                        and fu.busy_until <= t):
+                    fu.powered = False
 
+        # 5) accounting
+        for fu in self.fus.values():
+            if fu.powered:
+                fu.on_cycles += 1
+            else:
+                fu.gated_cycles += 1
+        return t
+
+    def _finish(self, t: int) -> ExecResult:
         end = max([t] + [f.busy_until for f in self.fus.values()])
         for fu in self.fus.values():  # drain accounting
             extra = end - t
@@ -176,10 +222,88 @@ class VLIWTimeline:
             cycles=end,
             fu_on_cycles={k: f.on_cycles for k, f in self.fus.items()},
             fu_gated_cycles={k: f.gated_cycles for k, f in self.fus.items()},
-            stall_cycles=stalls,
-            setpm_executed=n_setpm,
+            stall_cycles=self._stalls,
+            setpm_executed=self._n_setpm,
             wake_events={k: f.wake_events for k, f in self.fus.items()},
         )
+
+    def run(self, bundles: Iterable[dict[str, Instr]]) -> ExecResult:
+        self._stalls = 0
+        self._n_setpm = 0
+        t = 0
+        for bundle in bundles:
+            t = self._step(bundle, t)
+        return self._finish(t)
+
+
+class EventTimeline(VLIWTimeline):
+    """Event-driven executor: processes only the cycles that carry an
+    instruction and jumps over the empty stretches in closed form.
+
+    The program is a sorted list of ``(cycle_index, bundle)`` events —
+    semantically identical to the dense program that has ``bundle`` at
+    that index and an empty bundle everywhere else (``expand_events``
+    materializes exactly that program for the equality tests). Gap
+    handling replicates the cycle-stepper's per-cycle semantics: a
+    powered AUTO unit crosses its idle-detection window at
+    ``max(idle_since + window, busy_until)`` and is accounted gated from
+    that cycle on, so the two executors agree cycle-for-cycle.
+    """
+
+    def _gap(self, n: int, t: int) -> None:
+        """Advance through ``n`` empty cycles starting at machine time
+        ``t`` (closed form; mutates FU accounting/state)."""
+        for fu in self.fus.values():
+            if not fu.powered:
+                fu.gated_cycles += n
+            elif not (self.hw_auto and fu.mode == PMode.AUTO):
+                fu.on_cycles += n
+            else:
+                # first empty cycle accounts at t+1, last at t+n; the FU
+                # counts gated from the cycle it crosses the window
+                g = max(fu.idle_since + self._window(fu.kind),
+                        fu.busy_until)
+                on = min(max(g - t - 1, 0), n)
+                fu.on_cycles += on
+                if n > on:
+                    fu.gated_cycles += n - on
+                    fu.powered = False
+
+    def run(self, events: Iterable[tuple[int, dict[str, Instr]]],
+            horizon: Optional[int] = None) -> ExecResult:
+        self._stalls = 0
+        self._n_setpm = 0
+        t = 0
+        prev = -1
+        for idx, bundle in events:
+            if idx <= prev:
+                raise ValueError(
+                    f"events must be strictly increasing (got {idx} "
+                    f"after {prev})")
+            gap = idx - prev - 1
+            if gap:
+                self._gap(gap, t)
+                t += gap
+            t = self._step(bundle, t)
+            prev = idx
+        if horizon is not None and horizon > prev + 1:
+            tail = horizon - prev - 1
+            self._gap(tail, t)
+            t += tail
+        return self._finish(t)
+
+
+def expand_events(events: Iterable[tuple[int, dict[str, Instr]]],
+                  horizon: Optional[int] = None) \
+        -> list[dict[str, Instr]]:
+    """Dense bundle list equivalent to a sparse event program (the
+    reference cycle-stepper's input for the equality tests)."""
+    events = list(events)
+    length = max([horizon or 0] + [i + 1 for i, _ in events])
+    dense: list[dict[str, Instr]] = [{} for _ in range(length)]
+    for idx, bundle in events:
+        dense[idx] = bundle
+    return dense
 
 
 def fig15_program(n_periods: int = 4, *, with_setpm: bool,

@@ -1,0 +1,387 @@
+"""Program-plane lowering: workload traces -> per-unit cycle timelines.
+
+The closed-form policy engine (``repro.core.policies``) and the ``setpm``
+ISA plane (``repro.core.isa`` / ``repro.core.passes``) model the same
+§4.2–4.4 software-managed gating decisions at two abstraction levels.
+This module bridges them at workload scale:
+
+1. ``lower_workload`` lowers a compiled ``TraceArrays`` into per-unit
+   ``SlotUse`` streams (SA / VU / DMA / ICI) on a back-to-back cycle
+   schedule, plus a per-instance SRAM-demand timeline.
+2. The §4.3 passes run over the full-length program:
+   ``analyze_vu_idleness`` + ``instrument_setpm`` place the VU ``setpm``
+   pairs; SRAM dead intervals are analyzed per segment *band* (segments
+   between two adjacent distinct demand values share one busy pattern,
+   so the exact per-segment interval math vectorizes over ~tens of
+   bands instead of ~32k segments — ``sram_band_gating``).
+3. ``execute_program`` runs the instrumented program on the event-driven
+   ``EventTimeline`` executor and folds in the closed-form intra-op VU
+   burst model (shared with the policy engine: per-burst holes are
+   sub-cycle-schedule detail in both planes).
+4. ``crossval_record`` compares the resulting per-component gated-cycle
+   fractions and setpm counts against ``policies.evaluate``'s
+   ``ReGate-Full`` (sw) report. Tolerances are stated in EXPERIMENTS.md
+   §Program-plane; the deviations are the transition-edge accounting
+   (executor gates ``gap - delay`` where the closed form charges
+   ``gap - 2*delay``) and merged within-op slack on the hw-managed
+   components.
+
+Scheduling model (mirrors the policy engine's timing semantics): ops run
+back-to-back; per op, each component is busy for its own service time at
+op start — except the VU, which bursts across the WHOLE duration of a
+mixed op (paper Fig 15), so VU idle intervals visible to the compiler
+pass are exactly the runs of VU-free ops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu
+from repro.core.isa import (EventTimeline, ExecResult, Instr, PMode,
+                            expand_events, setpm)
+from repro.core.opgen import TraceArrays, Workload, compile_trace
+from repro.core.passes import (IdleInterval, SetpmPlacement, SlotUse,
+                               analyze_vu_idleness, instrument_setpm,
+                               should_gate)
+from repro.core.policies import (PolicyKnobs, _component_policies,
+                                 _fine_grained_vu_vec, evaluate,
+                                 trace_times)
+
+# component -> (unit name, FU kind) in the lowered program
+UNIT_OF = {"sa": ("sa0", "sa"), "vu": ("vu0", "vu"),
+           "hbm": ("dma0", "hbm"), "ici": ("ici0", "ici")}
+COMP_OF_UNIT = {u: c for c, (u, _) in UNIT_OF.items()}
+
+# the ReGate-Full machine the lowered programs execute on: SA wakes at
+# PE granularity + hw idle detection, VU software-managed (initial ON,
+# driven by the instrumented setpm), DMA/ICI hw idle detection. The
+# perf gate (benchmarks/perf_timeline_executor.py) and the executor
+# equality tests run THIS config — one definition, no drift.
+REGATE_FULL_TIMELINE = dict(
+    n_sa=1, n_vu=1, hw_auto_gating=True,
+    extra_units={"dma0": "hbm", "ici0": "ici"},
+    delay_keys={"sa": "sa_pe"},
+    initial_modes={"vu0": PMode.ON},
+)
+
+
+@dataclass
+class LoweredProgram:
+    """A workload lowered onto the cycle-accurate program plane."""
+    workload: str
+    npu: NPUSpec
+    horizon: int                       # nominal schedule length, cycles
+    uses: dict[str, list[SlotUse]]     # unit -> sorted scheduled uses
+    op_start: np.ndarray               # per-instance start cycle (i8)
+    op_end: np.ndarray                 # per-instance end cycle (i8)
+    inst_op: np.ndarray                # instance -> op row of the trace
+    demand: np.ndarray                 # per-instance SRAM demand (bytes)
+    tr: TraceArrays = field(repr=False)
+    tm: dict = field(repr=False)
+
+    @property
+    def n_instances(self) -> int:
+        return int(self.inst_op.size)
+
+
+def lower_workload(wl: Workload, npu: NPUSpec | str = "NPU-D") \
+        -> LoweredProgram:
+    """Expand the op stream (counts included) onto a back-to-back cycle
+    schedule and emit per-unit SlotUse streams."""
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    tr = compile_trace(wl)
+    tm = trace_times(tr, npu)
+    inst_op = np.repeat(np.arange(tr.n_ops), tr.count.astype(np.int64))
+    dur_s = tm["dur"][inst_op]
+    # cumulative rounding: per-instance edges drift < 1 cycle from the
+    # seconds-domain schedule over the whole program
+    edges = np.round(np.concatenate(([0.0], np.cumsum(dur_s)))
+                     * npu.freq_hz).astype(np.int64)
+    op_start, op_end = edges[:-1], edges[1:]
+    dur_cy = op_end - op_start
+
+    uses: dict[str, list[SlotUse]] = {u: [] for u, _ in UNIT_OF.values()}
+    for comp, (unit, _) in UNIT_OF.items():
+        t_c = tm[comp][inst_op]
+        active = (t_c > 0) & (dur_cy > 0)
+        if comp == "vu":
+            # VU bursts span the whole mixed-op duration (Fig 15); the
+            # intra-op holes are the closed-form burst model's domain
+            a_cy = dur_cy
+        else:
+            a_cy = np.minimum(
+                dur_cy, np.maximum(1, np.round(t_c * npu.freq_hz)
+                                   .astype(np.int64)))
+        starts = op_start[active]
+        lens = a_cy[active]
+        uses[unit] = [SlotUse(int(s), unit, "op", int(d))
+                      for s, d in zip(starts, lens)]
+    return LoweredProgram(
+        workload=wl.name, npu=npu, horizon=int(edges[-1]), uses=uses,
+        op_start=op_start, op_end=op_end, inst_op=inst_op,
+        demand=tr.sram_demand[inst_op], tr=tr, tm=tm)
+
+
+def rescale_program(prog: LoweredProgram, target_horizon: int) \
+        -> LoweredProgram:
+    """Compress a lowered program's schedule to ``target_horizon`` cycles
+    (gap/duration ratios kept; same-unit uses whose scaled cycles
+    collide keep the first use, so heavy compression thins the stream).
+
+    Real suite programs span billions of cycles — far beyond what the
+    dense cycle-stepper reference can step through — so the executor
+    equality tests and the timeline perf gate run on compressed
+    schedules. Compression can make same-unit uses overlap; both
+    executors resolve that identically through the structural-hazard
+    stall rule, so exact equality is unaffected.
+    """
+    f = target_horizon / max(1, prog.horizon)
+    if f >= 1.0:
+        return prog
+    uses = {}
+    for unit, us in prog.uses.items():
+        seen: dict[int, SlotUse] = {}
+        for u in us:
+            c = int(u.cycle * f)
+            if c not in seen:  # same-cycle collision: keep the first
+                seen[c] = SlotUse(c, unit, u.opcode,
+                                  max(1, int(u.duration * f)))
+        uses[unit] = [seen[c] for c in sorted(seen)]
+    start = np.floor(prog.op_start * f).astype(np.int64)
+    end = np.maximum(np.floor(prog.op_end * f).astype(np.int64), start)
+    return LoweredProgram(
+        workload=prog.workload, npu=prog.npu, horizon=int(target_horizon),
+        uses=uses, op_start=start, op_end=end, inst_op=prog.inst_op,
+        demand=prog.demand, tr=prog.tr, tm=prog.tm)
+
+
+# --------------------------------------------------------------------------
+# §4.3 passes over the full-length program
+# --------------------------------------------------------------------------
+
+def instrument_program(prog: LoweredProgram) -> list[SetpmPlacement]:
+    """Run the VU idleness analysis + BET-based setpm insertion over the
+    lowered program (the software-managed unit under ReGate-Full)."""
+    vu_uses = prog.uses[UNIT_OF["vu"][0]]
+    if not vu_uses:
+        # VU never used: one whole-program gate
+        idle = {UNIT_OF["vu"][0]:
+                [IdleInterval(UNIT_OF["vu"][0], 0, prog.horizon)]}
+    else:
+        idle = analyze_vu_idleness(vu_uses, horizon=prog.horizon,
+                                   include_leading=True)
+    return instrument_setpm(idle, prog.npu, "vu")
+
+
+def build_events(prog: LoweredProgram,
+                 placements: Optional[list[SetpmPlacement]] = None) \
+        -> list[tuple[int, dict[str, Instr]]]:
+    """Merge per-unit uses + setpm placements into a sparse event list
+    for ``EventTimeline`` (one bundle per cycle that carries anything).
+
+    Colliding misc-slot setpms with the same (fu_type, mode) merge their
+    bitmaps; a remaining collision slips one cycle later (the VLIW has a
+    single misc slot per cycle)."""
+    bundles: dict[int, dict[str, Instr]] = {}
+    for unit, us in prog.uses.items():
+        for u in us:
+            bundles.setdefault(u.cycle, {})[unit] = \
+                Instr(u.opcode, unit, u.duration)
+    for p in sorted(placements or [], key=lambda p: p.cycle):
+        c = max(0, p.cycle)
+        ins = p.instr
+        while True:
+            b = bundles.setdefault(c, {})
+            m = b.get("misc")
+            if m is None:
+                b["misc"] = ins
+                break
+            if (m.pm_fu_type == ins.pm_fu_type
+                    and m.pm_mode == ins.pm_mode
+                    and m.pm_range is None and ins.pm_range is None):
+                b["misc"] = setpm(m.pm_fu_type,
+                                  m.pm_bitmap | ins.pm_bitmap, m.pm_mode)
+                break
+            c += 1  # single misc slot per cycle: slip
+    return sorted(bundles.items())
+
+
+# --------------------------------------------------------------------------
+# SRAM segment-band lifetime analysis
+# --------------------------------------------------------------------------
+
+def sram_band_gating(prog: LoweredProgram) -> dict:
+    """Exact per-segment dead-interval gating, vectorized over segment
+    bands.
+
+    A segment at byte threshold T is live during instance i iff
+    ``demand_i > T`` (buffers are stack-allocated from address 0, the
+    paper's Fig 7 tile model). All segments whose thresholds fall
+    between two adjacent distinct demand values therefore share one busy
+    pattern, so the per-segment interval analysis runs once per band.
+    Dead intervals gate under the same §4.3 rule as the closed-form sw
+    policy (``should_gate``; transition cost 2x the on/off delay);
+    contiguous segments of a band share one range-setpm pair (Fig 14
+    variant 1).
+
+    Returns gated segment-cycles, busy segment-cycles, range-setpm
+    count, and the dead-segment count (never-used capacity).
+    """
+    npu = prog.npu
+    n_seg = npu.sram_segments
+    seg = SRAM_SEGMENT_BYTES
+    horizon = int(prog.horizon)
+    bet = npu.gating.bet["sram_off"]
+    delay = npu.gating.on_off_delay["sram_off"]
+    d = np.minimum(prog.demand, n_seg * seg)
+    out = {"gated_segcycles": 0.0, "busy_segcycles": 0.0,
+           "setpm": 0.0, "dead_segments": 0, "n_segments": n_seg,
+           "capacity_cycles": float(n_seg) * horizon}
+    if prog.n_instances == 0 or horizon == 0:
+        return out
+    vals = np.unique(d)
+    # band j: thresholds in [lo_j, hi_j) are busy iff demand >= hi_j;
+    # the final band [max_demand, capacity) is never busy
+    lows = np.concatenate(([0.0], vals))
+    highs = np.concatenate((vals, [float(n_seg) * seg]))
+    # gated dead intervals dedup by (start, end): bands sharing a dead
+    # interval collapse into one range-setpm pair (Fig 14 variant 1 +
+    # the single misc slot, exactly like instrument_setpm's bitmaps)
+    gap_keys: set[tuple[int, int]] = set()
+    any_dead_band = False
+    for lo, hi in zip(lows, highs):
+        s0 = int(np.ceil(lo / seg))
+        s1 = min(int(np.ceil(hi / seg)), n_seg)
+        width = s1 - s0
+        if width <= 0:
+            continue
+        if hi > vals[-1]:  # dead band: never used, one range-off setpm
+            out["gated_segcycles"] += float(width) * horizon
+            out["dead_segments"] += width
+            any_dead_band = True
+            continue
+        busy = d >= hi
+        idx = np.flatnonzero(busy)
+        if idx.size == 0:
+            out["gated_segcycles"] += float(width) * horizon
+            any_dead_band = True
+            continue
+        starts = prog.op_start[idx]
+        ends = prog.op_end[idx]
+        out["busy_segcycles"] += float(width) * float(
+            (ends - starts).sum())
+        # merged dead intervals: leading + inter-use + trailing
+        bounds_s = np.concatenate(([0], ends))
+        bounds_e = np.concatenate((starts, [horizon]))
+        gaps = (bounds_e - bounds_s).astype(np.float64)
+        gate = should_gate(gaps, bet, delay)
+        if gate.any():
+            out["gated_segcycles"] += float(width) * float(
+                (gaps[gate] - 2 * delay).sum())
+            for s, e in zip(bounds_s[gate], bounds_e[gate]):
+                gap_keys.add((int(s), int(e)))
+    out["setpm"] = 2.0 * len(gap_keys) + (1.0 if any_dead_band else 0.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# execution + cross-validation against the closed-form policy engine
+# --------------------------------------------------------------------------
+
+@dataclass
+class ProgramPlaneSummary:
+    workload: str
+    npu: str
+    horizon: int
+    cycles: int                      # executed length incl. stalls
+    n_events: int
+    stall_cycles: int
+    setpm_isa: dict[str, float]      # per component
+    gated_cycles: dict[str, float]   # per component (sram: seg-cycle
+    #                                  equivalent, capacity-normalized)
+    gated_frac: dict[str, float]
+    wake_events: dict[str, float]
+    exec_result: ExecResult = field(repr=False)
+
+
+def execute_program(prog: LoweredProgram,
+                    placements: Optional[list[SetpmPlacement]] = None,
+                    use_reference: bool = False) -> ProgramPlaneSummary:
+    """Run the instrumented program (ReGate-Full semantics: SA at PE
+    wake granularity + hw idle detection, VU software-managed via the
+    inserted setpm pairs, DMA/ICI hw idle detection) and fold in the
+    closed-form intra-op VU burst model and the SRAM band analysis.
+
+    ``use_reference`` executes on the dense cycle-stepper instead of the
+    event-driven executor (equality checks; O(cycles), so keep the
+    program small)."""
+    npu = prog.npu
+    if placements is None:
+        placements = instrument_program(prog)
+    events = build_events(prog, placements)
+    if use_reference:
+        from repro.core.isa import VLIWTimeline
+        res = VLIWTimeline(npu=npu, **REGATE_FULL_TIMELINE).run(
+            expand_events(events, prog.horizon))
+    else:
+        res = EventTimeline(npu=npu, **REGATE_FULL_TIMELINE).run(
+            events, horizon=prog.horizon)
+
+    gated = {c: float(res.fu_gated_cycles[u])
+             for c, (u, _) in UNIT_OF.items()}
+    wakes = {c: float(res.wake_events[u]) for c, (u, _) in UNIT_OF.items()}
+    setpm_isa = {c: 0.0 for c in UNIT_OF}
+    for p in placements:
+        setpm_isa[p.instr.pm_fu_type] = setpm_isa.get(
+            p.instr.pm_fu_type, 0.0) + 1.0
+
+    # intra-op VU bursts: closed form shared with the policy engine
+    fv = _fine_grained_vu_vec(
+        prog.tm, prog.tr, npu, _component_policies("ReGate-Full")["vu"],
+        1.0, npu.gating.leak_off_logic, PolicyKnobs())
+    gated["vu"] += fv["gated_s"] * npu.freq_hz
+    setpm_isa["vu"] += fv["setpm"]
+    wakes["vu"] += fv["wakes"]
+
+    # SRAM segment bands
+    sb = sram_band_gating(prog)
+    gated["sram"] = sb["gated_segcycles"] / max(1, sb["n_segments"])
+    setpm_isa["sram"] = sb["setpm"]
+
+    cycles = max(1, res.cycles)
+    frac = {c: gated[c] / cycles for c in gated}
+    return ProgramPlaneSummary(
+        workload=prog.workload, npu=npu.name, horizon=prog.horizon,
+        cycles=res.cycles, n_events=len(events),
+        stall_cycles=res.stall_cycles, setpm_isa=setpm_isa,
+        gated_cycles=gated, gated_frac=frac, wake_events=wakes,
+        exec_result=res)
+
+
+def crossval_record(wl: Workload, npu: NPUSpec | str = "NPU-D") -> dict:
+    """One flat record comparing the program plane against the
+    closed-form ``ReGate-Full`` (sw) policy evaluation."""
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    rep = evaluate(wl, npu, "ReGate-Full")
+    prog = lower_workload(wl, npu)
+    summ = execute_program(prog)
+    rt_cy = npu.cycles(rep.runtime_s)
+    rec = {
+        "workload": wl.name, "npu": npu.name,
+        "prog_cycles": summ.cycles, "policy_cycles": rt_cy,
+        "runtime_rel_err": abs(summ.cycles - rt_cy) / max(1.0, rt_cy),
+        "n_events": summ.n_events, "stall_cycles": summ.stall_cycles,
+    }
+    for c in ("sa", "vu", "hbm", "ici", "sram"):
+        pol_frac = rep.gated_s[c] / max(1e-30, rep.runtime_s)
+        rec[f"gated_frac_policy_{c}"] = pol_frac
+        rec[f"gated_frac_prog_{c}"] = summ.gated_frac[c]
+        rec[f"gated_frac_absdiff_{c}"] = abs(
+            summ.gated_frac[c] - pol_frac)
+    for c in ("vu", "sram"):  # the sw-managed components emit setpm
+        rec[f"setpm_policy_{c}"] = rep.setpm_by[c]
+        rec[f"setpm_prog_{c}"] = summ.setpm_isa[c]
+    return rec

@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu
-from repro.core.isa import Instr, PMode, setpm
+from repro.core.isa import Instr, PMode, setpm, unit_index
 
 INF = float("inf")
 
@@ -40,6 +40,10 @@ class IdleInterval:
     unit: str
     start: int         # first idle cycle
     end: float         # first busy cycle again (inf = never)
+    # a DMA issues inside the interval: the HBM round-trip dominates, so
+    # the gate decision treats the length as unbounded even though the
+    # wake still has to land before ``end`` (paper §4.3)
+    unbounded: bool = False
 
     @property
     def length(self) -> float:
@@ -48,11 +52,14 @@ class IdleInterval:
 
 def analyze_vu_idleness(uses: list[SlotUse],
                         dma_cycles: Optional[list[int]] = None,
-                        horizon: Optional[int] = None) \
+                        horizon: Optional[int] = None,
+                        include_leading: bool = False) \
         -> dict[str, list[IdleInterval]]:
     """Idle intervals per VU slot. ``dma_cycles``: cycles at which a DMA
-    issues — an interval containing one is treated as unbounded (the DMA
-    latency dominates)."""
+    issues — an interval containing one is marked ``unbounded`` (the DMA
+    latency dominates the gate decision). ``include_leading`` also emits
+    the [0, first_use) interval, which the workload-scale lowering needs
+    to mirror the policy engine's merged-gap accounting."""
     dma_cycles = sorted(dma_cycles or [])
     by_unit: dict[str, list[SlotUse]] = {}
     for u in sorted(uses, key=lambda s: s.cycle):
@@ -60,16 +67,15 @@ def analyze_vu_idleness(uses: list[SlotUse],
     out: dict[str, list[IdleInterval]] = {}
     for unit, us in by_unit.items():
         ivs = []
+        if include_leading and us and us[0].cycle > 0:
+            ivs.append(IdleInterval(unit, 0, us[0].cycle))
         for a, b in zip(us, us[1:]):
             start = a.cycle + a.duration
             end: float = b.cycle
             if end <= start:
                 continue
-            if any(start <= d < end for d in dma_cycles):
-                end = INF if horizon is None else max(end, horizon)
-                ivs.append(IdleInterval(unit, start, b.cycle))
-                continue
-            ivs.append(IdleInterval(unit, start, end))
+            unbounded = any(start <= d < end for d in dma_cycles)
+            ivs.append(IdleInterval(unit, start, end, unbounded=unbounded))
         if horizon is not None and us:
             tail = us[-1].cycle + us[-1].duration
             if horizon > tail:
@@ -118,36 +124,50 @@ class SetpmPlacement:
     reason: str
 
 
-def should_gate(interval_len: float, bet: int, delay: int) -> bool:
-    """Paper §4.3: gate iff idle > BET AND idle > 2x on/off delay."""
-    return interval_len > bet and interval_len > 2 * delay
+def should_gate(interval_len, bet: int, delay: int):
+    """Paper §4.3: gate iff idle > BET AND idle > 2x on/off delay.
+
+    Accepts a scalar (returns bool) or a numpy array of interval
+    lengths (returns a bool mask) — the one definition of the rule for
+    both the per-interval passes and the vectorized segment-band path.
+    """
+    return (interval_len > bet) & (interval_len > 2 * delay)
 
 
 def instrument_setpm(vu_idle: dict[str, list[IdleInterval]],
-                     npu: NPUSpec | str = "NPU-D") -> list[SetpmPlacement]:
-    """BET-based setpm insertion for VUs. Adjacent VU slots gated by the
-    same interval share one setpm via the fu bitmap (paper: one misc slot
-    per cycle, bitmap amortizes)."""
+                     npu: NPUSpec | str = "NPU-D", fu_type: str = "vu",
+                     bet_key: Optional[str] = None,
+                     delay_key: Optional[str] = None) \
+        -> list[SetpmPlacement]:
+    """BET-based setpm insertion for one FU family (default VU). Adjacent
+    slots gated by the same interval share one setpm via the fu bitmap
+    (paper: one misc slot per cycle, bitmap amortizes). ``bet_key`` /
+    ``delay_key`` override the Table-3 row (default: the fu type)."""
     npu = get_npu(npu) if isinstance(npu, str) else npu
-    bet = npu.gating.bet["vu"]
-    delay = npu.gating.on_off_delay["vu"]
+    bet = npu.gating.bet[bet_key or fu_type]
+    delay = npu.gating.on_off_delay[delay_key or fu_type]
     # group intervals by (start, end) so one bitmap covers multiple units
     groups: dict[tuple, int] = {}
     for unit, ivs in vu_idle.items():
-        idx = int(unit[2:])
+        idx = unit_index(unit)
         for iv in ivs:
-            if should_gate(iv.length, bet, delay):
-                key = (iv.start, iv.end)
+            profitable = should_gate(iv.length, bet, delay)
+            # a DMA-unbounded interval still needs room for the wake to
+            # land strictly after the gate — below that, gating would
+            # invert the off/on sequence and expose the full delay
+            if profitable or (iv.unbounded and iv.length > delay):
+                key = (iv.start, iv.end, profitable)
                 groups[key] = groups.get(key, 0) | (1 << idx)
     out = []
-    for (start, end), bitmap in sorted(groups.items()):
+    for (start, end, profitable), bitmap in sorted(groups.items()):
+        reason = (f"idle {end - start:.0f} > bet {bet}" if profitable
+                  else "dma-unbounded idle")
         out.append(SetpmPlacement(
-            int(start), setpm("vu", bitmap, PMode.OFF),
-            f"idle {end - start:.0f} > bet {bet}"))
+            int(start), setpm(fu_type, bitmap, PMode.OFF), reason))
         if end != INF:
             wake_at = int(end) - delay
             out.append(SetpmPlacement(
-                wake_at, setpm("vu", bitmap, PMode.ON),
+                wake_at, setpm(fu_type, bitmap, PMode.ON),
                 "pre-wake (hidden delay)"))
     return out
 

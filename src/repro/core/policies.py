@@ -70,6 +70,13 @@ class EnergyReport:
     dynamic_j: dict[str, float]
     setpm_count: float = 0.0
     wake_events: dict[str, float] = field(default_factory=dict)
+    # per-component time spent power-gated, in seconds (sram: unused-
+    # capacity-weighted seconds, i.e. capacity_fraction x time integral);
+    # temporal gating only — SA spatial PE-gating is tracked separately
+    # through sa_gating occupancy
+    gated_s: dict[str, float] = field(default_factory=dict)
+    # per-component setpm instruction counts (sums to setpm_count)
+    setpm_by: dict[str, float] = field(default_factory=dict)
 
     @property
     def total_j(self) -> float:
@@ -121,33 +128,35 @@ def op_times(op: Op, npu: NPUSpec) -> dict[str, float]:
 
 def _gated_idle_energy(gap_s: float, p_static: float, *, mode: str,
                        bet_s: float, delay_s: float, window_s: float,
-                       leak: float) -> tuple[float, float, float, float]:
+                       leak: float) \
+        -> tuple[float, float, float, float, float]:
     """Energy spent during one idle interval of length ``gap_s``.
 
-    Returns (energy_J, exposed_wake_s, wake_events, setpm_count).
-    mode: "none" | "hw" | "sw" | "ideal".
+    Returns (energy_J, exposed_wake_s, wake_events, setpm_count,
+    gated_s). mode: "none" | "hw" | "sw" | "ideal".
     """
     if gap_s <= 0:
-        return 0.0, 0.0, 0.0, 0.0
+        return 0.0, 0.0, 0.0, 0.0, 0.0
     if mode == "none":
-        return p_static * gap_s, 0.0, 0.0, 0.0
+        return p_static * gap_s, 0.0, 0.0, 0.0, 0.0
     if mode == "ideal":
-        return 0.0, 0.0, 0.0, 0.0
+        return 0.0, 0.0, 0.0, 0.0, gap_s
     if mode == "hw":
         # observe for the detection window, then gate if still idle;
         # next use pays the exposed wake-up delay.
         if gap_s <= window_s:
-            return p_static * gap_s, 0.0, 0.0, 0.0
+            return p_static * gap_s, 0.0, 0.0, 0.0, 0.0
         gated = gap_s - window_s
         e = p_static * window_s + leak * p_static * gated \
             + p_static * delay_s  # transition energy (on/off ramp)
-        return e, delay_s, 1.0, 0.0
+        return e, delay_s, 1.0, 0.0, gated
     # sw: compiler knows the interval; gate only if profitable & hideable
     if gap_s >= max(bet_s, 2.0 * delay_s):
         e = leak * p_static * (gap_s - 2 * delay_s) \
             + p_static * 2 * delay_s
-        return e, 0.0, 1.0, 2.0  # setpm off + setpm on
-    return p_static * gap_s, 0.0, 0.0, 0.0
+        # setpm off + setpm on; 2x delay held at full power (transition)
+        return e, 0.0, 1.0, 2.0, gap_s - 2 * delay_s
+    return p_static * gap_s, 0.0, 0.0, 0.0, 0.0
 
 
 @dataclass(frozen=True)
@@ -219,14 +228,15 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
     dynamic_j = {c: 0.0 for c in COMPONENTS}
     runtime = 0.0
     overhead = 0.0
-    setpm = 0.0
+    setpm_by = {c: 0.0 for c in COMPONENTS}
+    gated = {c: 0.0 for c in COMPONENTS}
     wakes = {c: 0.0 for c in COMPONENTS}
 
     # pending idle gap per component (merged across ops)
     pending = {c: 0.0 for c in COMPONENTS}
 
     def close_gap(c: str):
-        nonlocal setpm, overhead
+        nonlocal overhead
         gap = pending[c]
         pending[c] = 0.0
         if gap <= 0:
@@ -236,7 +246,7 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
         # shrink when the logic threshold voltage changes (paper §6.5)
         leak = max(leak_logic, g.leak_hbm_refresh) if c == "hbm" \
             else leak_logic
-        e, exposed, nw, sp = _gated_idle_energy(
+        e, exposed, nw, sp, gs = _gated_idle_energy(
             gap, static_w[c], mode=pol.mode, bet_s=bet_s(pol.delay_key),
             delay_s=delay_s(pol.delay_key),
             window_s=bet_s(pol.delay_key) * g.detection_window_frac,
@@ -247,7 +257,8 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
             # wake overlapped with the long DMA issue latency half the time
             overhead_local *= 0.5
         nonlocal_overhead(overhead_local)
-        setpm += sp
+        setpm_by[c] += sp
+        gated[c] += gs
         wakes[c] += nw
 
     def nonlocal_overhead(x: float):
@@ -258,7 +269,6 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
         """VU slack inside a mixed op is fragmented into per-burst gaps
         (paper Fig 15): HW detection mostly cannot exploit them, SW setpm
         can. Returns nothing; mutates accumulators."""
-        nonlocal setpm
         pol = cp["vu"]
         slack = dur - t_vu
         if slack <= 0:
@@ -273,12 +283,13 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
         if pol.mode == "none":
             static_j["vu"] += p * slack * n
         elif pol.mode == "ideal":
-            pass
+            gated["vu"] += slack * n
         elif pol.mode == "hw":
             if gap_cy > bet_cy:
                 gated_frac = max(0.0, (gap_cy - window_cy) / gap_cy)
                 static_j["vu"] += p * slack * n * (
                     (1 - gated_frac) + leak_logic * gated_frac)
+                gated["vu"] += slack * n * gated_frac
                 # exposed wake per burst: Base/HW hardware cannot pre-wake
                 nonlocal_overhead(n_bursts * delay_cy / npu.freq_hz * n)
                 wakes["vu"] += n_bursts * n
@@ -289,11 +300,13 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
                 trans = 2 * delay_cy / gap_cy
                 static_j["vu"] += p * slack * n * (
                     trans + leak_logic * (1 - trans))
-                setpm += 2 * n_bursts * n
+                gated["vu"] += slack * n * (1 - trans)
+                setpm_by["vu"] += 2 * n_bursts * n
                 wakes["vu"] += n_bursts * n
             else:
                 static_j["vu"] += p * slack * n
 
+    prev_used: Optional[float] = None  # sram setpm boundary tracking
     for op in wl.ops:
         t = op_times(op, npu)
         dur = t["_dur"]
@@ -335,7 +348,7 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
             if slack > 0:
                 leak = max(leak_logic, g.leak_hbm_refresh) if c == "hbm" \
                     else leak_logic
-                e, exposed, nw, sp = _gated_idle_energy(
+                e, exposed, nw, sp, gs = _gated_idle_energy(
                     slack, static_w[c], mode=pol.mode,
                     bet_s=bet_s(pol.delay_key),
                     delay_s=delay_s(pol.delay_key),
@@ -347,7 +360,8 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
                 if c in ("hbm", "ici"):
                     ov *= 0.5
                 nonlocal_overhead(ov)
-                setpm += sp * n
+                setpm_by[c] += sp * n
+                gated[c] += gs * n
                 wakes[c] += nw * n
 
         # --- SRAM: capacity-proportional static, demand-gated remainder ---
@@ -364,8 +378,16 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
             sram_leak_unused = 0.0
         static_j["sram"] += static_w["sram"] * dur * n * (
             used + unused * sram_leak_unused)
-        if pol.sram_state in ("sleep", "off"):
-            setpm += (2.0 if pol.mode == "sw" else 0.0)  # per op boundary
+        if pol.sram_state != "on":
+            gated["sram"] += unused * dur * n
+        if pol.sram_state in ("sleep", "off") and pol.mode == "sw":
+            # one range-setpm pair per demand-CHANGE boundary (Fig 14
+            # variant 1 collapses contiguous segments; a boundary where
+            # the footprint is unchanged needs no instruction), plus the
+            # initial gate of the above-demand range
+            if (used < 1.0 if prev_used is None else used != prev_used):
+                setpm_by["sram"] += 2.0
+        prev_used = used
         dynamic_j["sram"] += dyn_w["sram"] * max(
             t["sa"], t["vu"], t["hbm"], t["ici"]) * 0.5 * n
 
@@ -383,7 +405,8 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
     return EnergyReport(
         workload=wl.name, policy=policy, npu=npu.name,
         runtime_s=runtime, static_j=static_j, dynamic_j=dynamic_j,
-        setpm_count=setpm, wake_events=wakes)
+        setpm_count=sum(setpm_by.values()), wake_events=wakes,
+        gated_s=gated, setpm_by=setpm_by)
 
 
 # --------------------------------------------------------------------------
@@ -458,27 +481,29 @@ def _gated_idle_energy_vec(gap: np.ndarray, p_static: float, *, mode: str,
                            leak: float):
     """Piecewise-vectorized ``_gated_idle_energy`` over an array of gaps.
 
-    Returns (energy_J, exposed_wake_s, wake_events, setpm) arrays.
+    Returns (energy_J, exposed_wake_s, wake_events, setpm, gated_s)
+    arrays.
     """
     pos = gap > 0
     zeros = np.zeros_like(gap)
     ungated = np.where(pos, p_static * gap, 0.0)
     if mode == "none":
-        return ungated, zeros, zeros, zeros
+        return ungated, zeros, zeros, zeros, zeros
     if mode == "ideal":
-        return zeros, zeros, zeros, zeros
+        return zeros, zeros, zeros, zeros, np.where(pos, gap, 0.0)
     if mode == "hw":
         g = pos & (gap > window_s)
         e = np.where(g, p_static * window_s
                      + leak * p_static * (gap - window_s)
                      + p_static * delay_s, ungated)
-        return e, np.where(g, delay_s, 0.0), g.astype(np.float64), zeros
+        gs = np.where(g, gap - window_s, 0.0)
+        return e, np.where(g, delay_s, 0.0), g.astype(np.float64), zeros, gs
     # sw
     g = pos & (gap >= max(bet_s, 2.0 * delay_s))
     e = np.where(g, leak * p_static * (gap - 2 * delay_s)
                  + p_static * 2 * delay_s, ungated)
     gf = g.astype(np.float64)
-    return e, zeros, gf, 2.0 * gf
+    return e, zeros, gf, 2.0 * gf, np.where(g, gap - 2 * delay_s, 0.0)
 
 
 def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
@@ -508,8 +533,9 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
     static_j = {c: 0.0 for c in COMPONENTS}
     dynamic_j = {c: 0.0 for c in COMPONENTS}
     wakes = {c: 0.0 for c in COMPONENTS}
+    gated = {c: 0.0 for c in COMPONENTS}
+    setpm_by = {c: 0.0 for c in COMPONENTS}
     overhead = 0.0
-    setpm = 0.0
 
     for c in ("sa", "vu", "hbm", "ici"):
         pol = cp[c]
@@ -525,13 +551,14 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
 
         # merged cross-op idle gaps (each closed once, not per instance)
         gaps = _merged_gaps(active, np.where(active, 0.0, durn))
-        e, exposed, nw, sp = _gated_idle_energy_vec(
+        e, exposed, nw, sp, gs = _gated_idle_energy_vec(
             gaps, p, mode=pol.mode, bet_s=bet_s, delay_s=delay_s,
             window_s=window_s, leak=leak)
         sj = float(e.sum())
         ov = float(exposed.sum())
         wk = float(nw.sum())
-        setpm += float(sp.sum())
+        gt = float(gs.sum())
+        setpm_by[c] += float(sp.sum())
 
         an = a[active]
         cn = cnt[active]
@@ -558,21 +585,24 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
             sj += fv["static_j"]
             ov += fv["overhead"]
             wk += fv["wakes"]
-            setpm += fv["setpm"]
+            gt += fv["gated_s"]
+            setpm_by[c] += fv["setpm"]
         else:
             slack = np.where(active, dur - a, 0.0)
-            e2, exp2, nw2, sp2 = _gated_idle_energy_vec(
+            e2, exp2, nw2, sp2, gs2 = _gated_idle_energy_vec(
                 slack, p, mode=pol.mode, bet_s=bet_s, delay_s=delay_s,
                 window_s=window_s, leak=leak)
             sj += float((e2 * cnt).sum())
             ov += float((exp2 * cnt).sum())
             wk += float((nw2 * cnt).sum())
-            setpm += float((sp2 * cnt).sum())
+            gt += float((gs2 * cnt).sum())
+            setpm_by[c] += float((sp2 * cnt).sum())
         if c in ("hbm", "ici"):
             # wake overlapped with the long DMA issue latency half the time
             ov *= 0.5
         static_j[c] = sj
         wakes[c] = wk
+        gated[c] = gt
         overhead += ov
 
     # --- SRAM: capacity-proportional static, demand-gated remainder ---
@@ -582,8 +612,14 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
                         "off": leak_off}.get(pol.sram_state, 0.0)
     static_j["sram"] = static_w["sram"] * float(
         (durn * (used + (1.0 - used) * sram_leak_unused)).sum())
-    if pol.sram_state in ("sleep", "off") and pol.mode == "sw":
-        setpm += 2.0 * tr.n_ops  # per op boundary
+    if pol.sram_state != "on":
+        gated["sram"] = float((durn * (1.0 - used)).sum())
+    if pol.sram_state in ("sleep", "off") and pol.mode == "sw" \
+            and tr.n_ops:
+        # one range-setpm pair per demand-CHANGE boundary (matches the
+        # reference engine's prev_used tracking)
+        changes = int(np.count_nonzero(used[1:] != used[:-1]))
+        setpm_by["sram"] = 2.0 * (changes + (1 if used[0] < 1.0 else 0))
     dynamic_j["sram"] = dyn_w["sram"] * 0.5 * float(
         (tm["max4"] * cnt).sum())
 
@@ -595,7 +631,8 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
     return EnergyReport(
         workload=wl.name, policy=policy, npu=npu.name,
         runtime_s=runtime, static_j=static_j, dynamic_j=dynamic_j,
-        setpm_count=setpm, wake_events=wakes)
+        setpm_count=sum(setpm_by.values()), wake_events=wakes,
+        gated_s=gated, setpm_by=setpm_by)
 
 
 def _fine_grained_vu_vec(tm: dict, tr: TraceArrays, npu: NPUSpec,
@@ -609,7 +646,7 @@ def _fine_grained_vu_vec(tm: dict, tr: TraceArrays, npu: NPUSpec,
     sel = sel & (slack > 0)
     if not sel.any():
         return {"static_j": 0.0, "overhead": 0.0, "wakes": 0.0,
-                "setpm": 0.0}
+                "setpm": 0.0, "gated_s": 0.0}
     g = npu.gating
     slack = slack[sel]
     n = tr.count[sel]
@@ -622,28 +659,32 @@ def _fine_grained_vu_vec(tm: dict, tr: TraceArrays, npu: NPUSpec,
     psn = p * slack * n
     if pol.mode == "none":
         return {"static_j": float(psn.sum()), "overhead": 0.0,
-                "wakes": 0.0, "setpm": 0.0}
+                "wakes": 0.0, "setpm": 0.0, "gated_s": 0.0}
     if pol.mode == "ideal":
         return {"static_j": 0.0, "overhead": 0.0, "wakes": 0.0,
-                "setpm": 0.0}
+                "setpm": 0.0, "gated_s": float((slack * n).sum())}
     if pol.mode == "hw":
         gated = gap_cy > bet_cy
         gated_frac = np.maximum(0.0, (gap_cy - window_cy) / gap_cy)
         e = np.where(gated, psn * ((1 - gated_frac)
                                    + leak_logic * gated_frac), psn)
+        gs = np.where(gated, slack * n * gated_frac, 0.0)
         # exposed wake per burst: Base/HW hardware cannot pre-wake
         ov = np.where(gated, n_bursts * delay_cy / npu.freq_hz * n, 0.0)
         wk = np.where(gated, n_bursts * n, 0.0)
         return {"static_j": float(e.sum()), "overhead": float(ov.sum()),
-                "wakes": float(wk.sum()), "setpm": 0.0}
+                "wakes": float(wk.sum()), "setpm": 0.0,
+                "gated_s": float(gs.sum())}
     # sw
     gated = gap_cy >= np.maximum(bet_cy, 2 * delay_cy)
     trans = np.where(gap_cy > 0, 2 * delay_cy / gap_cy, 0.0)
     e = np.where(gated, psn * (trans + leak_logic * (1 - trans)), psn)
+    gs = np.where(gated, slack * n * (1 - trans), 0.0)
     sp = np.where(gated, 2 * n_bursts * n, 0.0)
     wk = np.where(gated, n_bursts * n, 0.0)
     return {"static_j": float(e.sum()), "overhead": 0.0,
-            "wakes": float(wk.sum()), "setpm": float(sp.sum())}
+            "wakes": float(wk.sum()), "setpm": float(sp.sum()),
+            "gated_s": float(gs.sum())}
 
 
 def evaluate_all(wl: Workload, npu="NPU-D",

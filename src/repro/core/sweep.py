@@ -71,6 +71,23 @@ def sweep(workloads: Sequence[Workload] | Workload,
     return records
 
 
+def sweep_program_plane(workloads: Sequence[Workload] | Workload,
+                        npus: Iterable[NPUSpec | str] = ("NPU-D",)) \
+        -> list[dict]:
+    """Cross-validation sweep: lower every (workload, npu) cell onto the
+    program plane (``repro.core.lowering``), execute it on the
+    event-driven ISA executor, and emit one flat record per cell
+    comparing gated-cycle fractions and setpm counts against the
+    closed-form ``ReGate-Full`` evaluation. Record order is
+    workload-major, then NPU (same convention as ``sweep``)."""
+    from repro.core.lowering import crossval_record
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
+    return [crossval_record(wl, npu)
+            for wl in workloads for npu in npu_specs]
+
+
 def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     """Attach ``savings`` (1 - total_j/baseline_total_j) to each record,
     matching records to their baseline within the same

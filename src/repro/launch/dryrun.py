@@ -28,6 +28,7 @@ from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch, \
 from repro.core.roofline import model_flops_estimate, report_from_hlo
 from repro.data.specs import batch_specs
 from repro.launch.mesh import make_production_mesh, mesh_desc, n_chips
+from repro.parallel.jax_compat import set_mesh
 from repro.models import model as M
 from repro.models import registry
 from repro.models.param import is_spec, tree_sds
@@ -274,7 +275,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     rules = rules_for(shape.kind, rules_name)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh), use_rules(rules):
+        with set_mesh(mesh), use_rules(rules):
             lowered, meta = lower_cell(cfg, shape, mesh, rules,
                                        grad_compression=grad_compression,
                                        remat_override=remat_override)

@@ -6,15 +6,13 @@ device; only the dry-run sets XLA_FLAGS to fabricate 512 host devices.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.parallel.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_desc(mesh) -> str:

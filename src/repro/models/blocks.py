@@ -305,25 +305,29 @@ def _moe_group_smap_fn(cfg: ArchConfig, n_model: int, batch_axes):
 
 def _moe_group_smap(expert_w, router, tok, cfg: ArchConfig):
     from jax.sharding import PartitionSpec as P
-    mesh = jax.sharding.get_abstract_mesh()
-    axes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+    from repro.parallel.jax_compat import (get_abstract_mesh,
+                                           mesh_axis_sizes, shard_map)
+    mesh = get_abstract_mesh()
+    axes = mesh_axis_sizes(mesh)
     n_model = axes.get("model", 1)
     batch_axes = tuple(a for a in ("pod", "data") if a in axes)
     f = _moe_group_smap_fn(cfg, n_model, batch_axes)
     tok_spec = P(batch_axes if batch_axes else None)
-    return jax.shard_map(
+    return shard_map(
         f, mesh=mesh,
         in_specs=(tok_spec, P(), P("model"), P("model"), P("model")),
         out_specs=(tok_spec, P()),
-        check_vma=False,
+        check=False,
     )(tok, router, *expert_w)
 
 
 def moe_shard_map_applicable(cfg: ArchConfig) -> bool:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    from repro.parallel.jax_compat import get_abstract_mesh, mesh_axis_sizes
+    mesh = get_abstract_mesh()
+    if mesh is None:
         return False
-    axes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    axes = mesh_axis_sizes(mesh)
     n_model = axes.get("model", 1)
     return cfg.moe is not None and cfg.moe.n_experts % n_model == 0
 

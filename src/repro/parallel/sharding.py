@@ -19,6 +19,8 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.jax_compat import get_abstract_mesh, mesh_axis_sizes
+
 AxisTarget = Union[None, str, tuple[str, ...]]
 
 
@@ -189,9 +191,8 @@ def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     rules = _CURRENT.get()
     if rules is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = get_abstract_mesh()
+    if mesh is None:
         return x
-    mesh_shape = dict(zip(mesh.axis_names, mesh.axis_sizes))
-    ps = act_pspec(rules, axes, x.shape, mesh_shape)
+    ps = act_pspec(rules, axes, x.shape, mesh_axis_sizes(mesh))
     return jax.lax.with_sharding_constraint(x, ps)

@@ -11,12 +11,12 @@ _SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import tempfile
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint.manager import CheckpointManager
+    from repro.parallel.jax_compat import make_mesh
 
     def mesh_of(shape):
-        return jax.make_mesh(shape, ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        return make_mesh(shape, ("data", "model"))
 
     state = {"w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
              "m": jnp.arange(64, dtype=jnp.float32).reshape(16, 4)}

@@ -1,0 +1,140 @@
+"""Event-driven executor vs the cycle-stepper reference.
+
+The contract (ISSUE 2): EXACT equality on the microbenchmarks (Fig 15
+programs, randomized sparse programs) and <=1e-9 relative on sampled
+workload-scale programs — the ExecResult counters are integers, so the
+workload check is exact equality too.
+"""
+import random
+
+import pytest
+
+from repro.core.isa import (EventTimeline, Instr, PMode, VLIWTimeline,
+                            expand_events, fig15_program, setpm,
+                            unit_index)
+from repro.core.lowering import (REGATE_FULL_TIMELINE, build_events,
+                                 instrument_program, lower_workload,
+                                 rescale_program)
+from repro.core.opgen import paper_suite
+
+REL = 1e-9
+
+
+def _as_events(bundles):
+    return [(i, b) for i, b in enumerate(bundles) if b]
+
+
+def _assert_equal(a, b, ctx=""):
+    assert a.cycles == b.cycles, (ctx, "cycles", a.cycles, b.cycles)
+    assert a.stall_cycles == b.stall_cycles, (ctx, "stalls")
+    assert a.setpm_executed == b.setpm_executed, (ctx, "setpm")
+    assert a.fu_on_cycles == b.fu_on_cycles, (ctx, "on")
+    assert a.fu_gated_cycles == b.fu_gated_cycles, (ctx, "gated")
+    assert a.wake_events == b.wake_events, (ctx, "wakes")
+    # the stated workload-program bound (trivially implied by equality)
+    for k in a.fu_on_cycles:
+        num = abs(a.fu_on_cycles[k] - b.fu_on_cycles[k])
+        den = max(1, a.fu_on_cycles[k], b.fu_on_cycles[k])
+        assert num / den <= REL
+
+
+@pytest.mark.parametrize("hw_auto", [False, True])
+@pytest.mark.parametrize("with_setpm", [False, True])
+def test_fig15_exact_equality(hw_auto, with_setpm):
+    prog = fig15_program(6, with_setpm=with_setpm)
+    ref = VLIWTimeline(n_sa=2, n_vu=2, hw_auto_gating=hw_auto).run(prog)
+    ev = EventTimeline(n_sa=2, n_vu=2, hw_auto_gating=hw_auto).run(
+        _as_events(prog), horizon=len(prog))
+    _assert_equal(ref, ev, f"fig15 auto={hw_auto} setpm={with_setpm}")
+
+
+def test_randomized_sparse_exact_equality():
+    """Random sparse programs: gaps, multi-cycle latencies, overlapping
+    same-unit uses (stalls), setpm on every FU family, mixed initial
+    modes, with and without hardware auto-gating."""
+    rng = random.Random(7)
+    for trial in range(25):
+        events = []
+        c = 0
+        for _ in range(40):
+            c += rng.choice([1, 2, 3, 7, 15, 40, 200, 900])
+            b = {}
+            if rng.random() < 0.3:
+                b["misc"] = setpm(
+                    rng.choice(["vu", "sa", "hbm", "ici"]),
+                    rng.randrange(1, 4),
+                    rng.choice([PMode.ON, PMode.OFF]))
+            for u in ("sa0", "vu0", "vu1", "dma0", "ici0"):
+                if rng.random() < 0.4:
+                    b[u] = Instr("op", u, rng.choice([1, 2, 5, 30, 100]))
+            if b:
+                events.append((c, b))
+        horizon = c + rng.choice([0, 5, 500])
+        for hw_auto in (False, True):
+            kw = dict(n_sa=1, n_vu=2, hw_auto_gating=hw_auto,
+                      extra_units={"dma0": "hbm", "ici0": "ici"},
+                      delay_keys={"sa": "sa_pe"},
+                      initial_modes={"vu1": PMode.ON})
+            ref = VLIWTimeline(**kw).run(expand_events(events, horizon))
+            ev = EventTimeline(**kw).run(events, horizon)
+            _assert_equal(ref, ev, f"trial={trial} auto={hw_auto}")
+
+
+@pytest.mark.parametrize("wl_idx", [0, 8, 15])  # train, decode, diffusion
+def test_sampled_workload_program_equality(wl_idx):
+    """Lowered + instrumented suite programs, schedule-compressed so the
+    dense reference stays steppable, must agree exactly."""
+    wl = paper_suite()[wl_idx]
+    prog = rescale_program(lower_workload(wl, "NPU-D"), 200_000)
+    events = build_events(prog, instrument_program(prog))
+    kw = dict(npu="NPU-D", **REGATE_FULL_TIMELINE)
+    ref = VLIWTimeline(**kw).run(expand_events(events, prog.horizon))
+    ev = EventTimeline(**kw).run(events, horizon=prog.horizon)
+    _assert_equal(ref, ev, wl.name)
+    assert len(events) > 50  # really a workload-scale program
+
+
+def test_event_executor_rejects_unsorted():
+    tl = EventTimeline(n_sa=1, n_vu=1)
+    ev = [(5, {"sa0": Instr("op", "sa0", 1)}),
+          (5, {"vu0": Instr("op", "vu0", 1)})]
+    with pytest.raises(ValueError):
+        tl.run(ev)
+
+
+def test_event_gap_autogating_boundary():
+    """A unit crosses its idle-detection window mid-gap: the closed-form
+    gap split must match the stepper at the exact boundary cycle."""
+    win = VLIWTimeline()._window("vu")
+    for gap in (win - 1, win, win + 1, win + 37):
+        events = [(0, {"vu0": Instr("op", "vu0", 1)}),
+                  (1 + gap, {"vu0": Instr("op", "vu0", 1)})]
+        ref = VLIWTimeline(n_sa=1, n_vu=1).run(
+            expand_events(events, 2 + gap))
+        ev = EventTimeline(n_sa=1, n_vu=1).run(events, horizon=2 + gap)
+        _assert_equal(ref, ev, f"gap={gap}")
+
+
+def test_rerun_does_not_accumulate_counters():
+    """stall/setpm counters reset per run() (FU cycle accounting has
+    always accumulated across runs; the counters must not). FU power
+    state also carries over, so restore it between runs to isolate the
+    counters."""
+    prog = fig15_program(4, with_setpm=False)
+    tl = VLIWTimeline(n_sa=2, n_vu=2, hw_auto_gating=True)
+    first = tl.run(prog)
+    assert first.stall_cycles > 0  # hw auto-gating exposes VU wakes
+    for fu in tl.fus.values():
+        fu.powered, fu.mode = True, PMode.AUTO
+        fu.ready_at = fu.busy_until = fu.idle_since = 0
+    second = tl.run(prog)
+    assert second.setpm_executed == first.setpm_executed == 0
+    assert second.stall_cycles == first.stall_cycles
+
+
+def test_unit_index():
+    assert unit_index("vu0") == 0
+    assert unit_index("sa12") == 12
+    assert unit_index("dma0") == 0
+    assert unit_index("dma") == 0
+    assert unit_index("ici") == 0

@@ -119,3 +119,114 @@ def test_sram_dead_interval_gating():
              if p.instr.pm_range == (0, SRAM_SEGMENT_BYTES)]
     assert (PMode.OFF, "dead interval") in kinds
     assert any(m == PMode.ON for m, _ in kinds)
+
+
+# ------------------------------------------------- edge cases (ISSUE 2)
+def test_vu_idleness_zero_length_and_adjacent_intervals():
+    """Back-to-back and overlapping uses produce NO idle interval; a
+    one-cycle hole produces exactly a length-1 interval."""
+    uses = [SlotUse(0, "vu0", duration=5), SlotUse(5, "vu0"),   # adjacent
+            SlotUse(6, "vu0", duration=4), SlotUse(8, "vu0"),   # overlap
+            SlotUse(9, "vu0"), SlotUse(11, "vu0")]              # 1-gap
+    idle = analyze_vu_idleness(uses)
+    assert idle["vu0"] == [IdleInterval("vu0", 10, 11)]
+    assert idle["vu0"][0].length == 1
+
+
+def test_vu_idleness_leading_interval():
+    uses = [SlotUse(40, "vu0"), SlotUse(100, "vu0")]
+    none = analyze_vu_idleness(uses)
+    lead = analyze_vu_idleness(uses, include_leading=True)
+    assert none["vu0"][0].start == 41
+    assert lead["vu0"][0] == IdleInterval("vu0", 0, 40)
+    # a unit already busy at cycle 0 gets no leading interval
+    assert analyze_vu_idleness([SlotUse(0, "vu0"), SlotUse(9, "vu0")],
+                               include_leading=True)["vu0"][0].start == 1
+
+
+def test_instrument_setpm_interval_open_at_end():
+    """end=inf (no next use): gate with an OFF but never schedule a
+    pre-wake (there is nothing to wake for)."""
+    npu = get_npu("NPU-D")
+    idle = {"vu0": [IdleInterval("vu0", 10, float("inf"))]}
+    placements = instrument_setpm(idle, npu)
+    assert len(placements) == 1
+    assert placements[0].instr.pm_mode == PMode.OFF
+    assert placements[0].cycle == 10
+
+
+def test_instrument_setpm_unbounded_dma_interval():
+    """A DMA inside a nominally-too-short interval still gates (§4.3:
+    the HBM latency dominates), and the pre-wake lands before the next
+    use."""
+    npu = get_npu("NPU-D")
+    bet = npu.gating.bet["vu"]
+    delay = npu.gating.on_off_delay["vu"]
+    short = bet // 2
+    uses = [SlotUse(0, "vu0"), SlotUse(1 + short, "vu0")]
+    no_dma = instrument_setpm(analyze_vu_idleness(uses), npu)
+    with_dma = instrument_setpm(
+        analyze_vu_idleness(uses, dma_cycles=[2]), npu)
+    assert no_dma == []  # below BET: not gated
+    offs = [p for p in with_dma if p.instr.pm_mode == PMode.OFF]
+    ons = [p for p in with_dma if p.instr.pm_mode == PMode.ON]
+    assert len(offs) == 1 and len(ons) == 1
+    assert ons[0].cycle == 1 + short - delay
+    assert offs[0].cycle < ons[0].cycle  # gate strictly before pre-wake
+    assert offs[0].reason == "dma-unbounded idle"
+
+
+def test_instrument_setpm_unbounded_shorter_than_delay_not_gated():
+    """A DMA-unbounded interval with no room for the wake to land after
+    the gate must NOT be gated — otherwise the pre-wake would precede
+    the off and the next use would pay the full exposed delay."""
+    npu = get_npu("NPU-D")
+    delay = npu.gating.on_off_delay["vu"]
+    for length in (1, delay):
+        uses = [SlotUse(0, "vu0", duration=1),
+                SlotUse(1 + length, "vu0")]
+        placements = instrument_setpm(
+            analyze_vu_idleness(uses, dma_cycles=[1]), npu)
+        assert placements == [], length
+    # one cycle of room: gated, in the right order
+    uses = [SlotUse(0, "vu0", duration=1), SlotUse(2 + delay, "vu0")]
+    placements = instrument_setpm(
+        analyze_vu_idleness(uses, dma_cycles=[1]), npu)
+    assert [p.instr.pm_mode for p in placements] == [PMode.OFF, PMode.ON]
+    assert placements[0].cycle < placements[1].cycle
+
+
+def test_should_gate_exactly_at_thresholds():
+    """BET exactly at threshold does NOT gate (strict >), one cycle over
+    does; same for the 2x-delay bound."""
+    assert not should_gate(100, bet=100, delay=10)
+    assert should_gate(101, bet=100, delay=10)
+    assert not should_gate(100, bet=50, delay=50)   # == 2x delay
+    assert should_gate(101, bet=50, delay=50)
+    assert not should_gate(0, bet=0, delay=0)
+
+
+def test_sram_overlapping_segment_lifetimes_merge():
+    """Overlapping and touching buffer lifetimes on one segment merge
+    into a single busy interval; a disjoint later buffer stays
+    separate."""
+    bufs = [BufferLifetime(0, 100, 0, 4096),
+            BufferLifetime(50, 180, 0, 4096),     # overlaps
+            BufferLifetime(180, 220, 0, 4096),    # touches
+            BufferLifetime(5000, 5100, 0, 4096)]  # disjoint
+    seg = analyze_sram_lifetimes(bufs, 4096, horizon=6000)
+    (s, merged), = seg
+    assert s == 0
+    assert merged == [(0, 220), (5000, 5100)]
+
+
+def test_instrument_setpm_generalized_fu_type():
+    """The pass drives any FU family via the Table-3 keys (here: ici)."""
+    npu = get_npu("NPU-D")
+    bet = npu.gating.bet["ici"]
+    idle = {"ici0": [IdleInterval("ici0", 0, bet * 3)]}
+    placements = instrument_setpm(idle, npu, fu_type="ici")
+    assert placements[0].instr.pm_fu_type == "ici"
+    assert placements[0].instr.pm_bitmap == 1
+    ons = [p for p in placements if p.instr.pm_mode == PMode.ON]
+    assert ons[0].cycle == bet * 3 - npu.gating.on_off_delay["ici"]

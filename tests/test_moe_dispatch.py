@@ -64,20 +64,20 @@ _SMAP_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.configs import get_arch
     from repro.models import blocks, registry
     from repro.models.param import init_params
+    from repro.parallel.jax_compat import make_mesh, set_mesh
 
     cfg = get_arch("granite-moe-1b-a400m").reduced()  # 4 experts top-2
     specs = registry.layer_specs(cfg)["moe"]
     p = init_params(specs, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
                           jnp.float32)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     from repro.parallel.sharding import BASELINE, use_rules
-    with jax.set_mesh(mesh), use_rules(BASELINE):
+    with set_mesh(mesh), use_rules(BASELINE):
         blocks.MOE_SHARD_MAP["enabled"] = False
         y0, a0 = jax.jit(lambda p, x: blocks.moe_fwd(p, x, cfg))(p, x)
         blocks.MOE_SHARD_MAP["enabled"] = True

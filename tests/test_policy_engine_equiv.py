@@ -36,6 +36,9 @@ def _assert_reports_match(a, b, ctx: str):
         assert _rel(a.static_j[c], b.static_j[c]) <= RTOL, (ctx, c)
         assert _rel(a.dynamic_j[c], b.dynamic_j[c]) <= RTOL, (ctx, c)
         assert _rel(a.wake_events[c], b.wake_events[c]) <= RTOL, (ctx, c)
+        assert _rel(a.gated_s[c], b.gated_s[c]) <= RTOL, (ctx, c, "gated")
+        assert _rel(a.setpm_by[c], b.setpm_by[c]) <= RTOL, \
+            (ctx, c, "setpm_by")
 
 
 @pytest.mark.parametrize("npu", sorted(NPUS))

@@ -1,0 +1,127 @@
+"""Program plane vs closed-form policy engine (ISSUE 2 acceptance).
+
+The lowered + §4.3-instrumented programs, executed on the event-driven
+ISA executor, must reproduce ``policies.evaluate``'s ``ReGate-Full``
+(sw) decisions across the paper suite x every NPU generation.
+
+Stated tolerances (derivation in EXPERIMENTS.md §Program-plane):
+
+* runtime: relative difference <= 0.5% (exposed-wake modeling: the
+  executor stalls the schedule, the closed form adds overhead at the
+  end and halves DMA-overlapped HBM/ICI wakes);
+* per-component gated-cycle fraction: absolute difference <= 0.005
+  (transition-edge accounting: the executor gates ``gap - delay``
+  where the closed form charges ``gap - 2*delay``, plus sub-cycle
+  schedule rounding);
+* VU setpm count: relative difference <= 1e-6 (the §4.3 pass and the
+  sw closed form apply the same BET rule to the same merged gaps);
+* SRAM range-setpm count: program plane <= closed form (the BET rule
+  and the Fig 14 range collapse only ever REMOVE instructions relative
+  to the closed form's one-pair-per-demand-change upper bound).
+"""
+import numpy as np
+import pytest
+
+from repro.core.hw import NPUS, SRAM_SEGMENT_BYTES, get_npu
+from repro.core.lowering import (crossval_record, execute_program,
+                                 lower_workload, rescale_program,
+                                 sram_band_gating)
+from repro.core.opgen import Op, Workload, paper_suite
+from repro.core.sweep import sweep_program_plane
+
+RT_REL = 0.005
+FRAC_ABS = 0.005
+VU_SETPM_REL = 1e-6
+
+
+@pytest.mark.parametrize("npu", sorted(NPUS))
+def test_crossval_suite(npu):
+    for rec in sweep_program_plane(paper_suite(), npus=(npu,)):
+        ctx = (rec["workload"], npu)
+        assert rec["runtime_rel_err"] <= RT_REL, (ctx, "runtime")
+        for c in ("sa", "vu", "hbm", "ici", "sram"):
+            assert rec[f"gated_frac_absdiff_{c}"] <= FRAC_ABS, (ctx, c)
+            assert 0.0 <= rec[f"gated_frac_prog_{c}"] <= 1.0, (ctx, c)
+        pv, qv = rec["setpm_policy_vu"], rec["setpm_prog_vu"]
+        assert abs(pv - qv) <= VU_SETPM_REL * max(1.0, pv, qv), \
+            (ctx, "vu setpm", pv, qv)
+        assert rec["setpm_prog_sram"] <= rec["setpm_policy_sram"] + 1e-9, \
+            (ctx, "sram setpm", rec["setpm_policy_sram"],
+             rec["setpm_prog_sram"])
+
+
+def test_event_and_reference_execution_agree_end_to_end():
+    """execute_program on the event executor == on the dense stepper
+    (full pipeline including instrumentation), on a compressed
+    workload program."""
+    wl = paper_suite()[8]  # llama3-8b decode
+    prog = rescale_program(lower_workload(wl, "NPU-D"), 150_000)
+    a = execute_program(prog)
+    b = execute_program(prog, use_reference=True)
+    assert a.cycles == b.cycles
+    assert a.stall_cycles == b.stall_cycles
+    assert a.setpm_isa == b.setpm_isa
+    assert a.gated_cycles == b.gated_cycles
+    assert a.wake_events == b.wake_events
+
+
+def _brute_force_sram(prog, npu):
+    """Independent per-segment reference: materialize every segment's
+    busy pattern over the instance stream and apply the §4.3 rule."""
+    n_seg = npu.sram_segments
+    seg = SRAM_SEGMENT_BYTES
+    bet = npu.gating.bet["sram_off"]
+    delay = npu.gating.on_off_delay["sram_off"]
+    horizon = prog.horizon
+    gated = 0.0
+    keys = set()
+    dead_any = False
+    for s in range(n_seg):
+        busy = prog.demand > s * seg
+        idx = np.flatnonzero(busy)
+        if idx.size == 0:
+            gated += horizon
+            dead_any = True
+            continue
+        starts = prog.op_start[idx]
+        ends = prog.op_end[idx]
+        bs = np.concatenate(([0], ends))
+        be = np.concatenate((starts, [horizon]))
+        for a, b in zip(bs, be):
+            gap = b - a
+            if gap > bet and gap > 2 * delay:
+                gated += gap - 2 * delay
+                keys.add((int(a), int(b)))
+    return gated, 2.0 * len(keys) + (1.0 if dead_any else 0.0)
+
+
+def test_sram_band_gating_matches_per_segment_reference():
+    """The band vectorization is exact: same gated segment-cycles and
+    setpm count as the brute-force per-segment sweep (small SRAM)."""
+    from dataclasses import replace
+    npu = replace(get_npu("NPU-D"), sram_mb=1)  # 256 segments
+    ops = tuple(
+        Op(f"op{i}", flops_vu=1e9 * (1 + i % 3),
+           sram_demand=d, count=c)
+        for i, (d, c) in enumerate([
+            (200 * 1024, 3), (900 * 1024, 1), (64 * 1024, 8),
+            (0, 2), (1 << 20, 1), (300 * 1024, 5), (8 * 1024, 40),
+        ]))
+    wl = Workload("sram-bands", "train", ops)
+    prog = lower_workload(wl, npu)
+    band = sram_band_gating(prog)
+    ref_gated, ref_setpm = _brute_force_sram(prog, npu)
+    assert band["gated_segcycles"] == pytest.approx(ref_gated, rel=1e-12)
+    assert band["setpm"] == ref_setpm
+    assert band["dead_segments"] == 0  # 1 MiB demand covers the top
+    cap = band["capacity_cycles"]
+    assert 0.0 < band["gated_segcycles"] < cap
+    assert band["busy_segcycles"] + band["gated_segcycles"] <= cap + 1e-6
+
+
+def test_crossval_record_fields():
+    rec = crossval_record(paper_suite()[12], "NPU-D")  # dlrm-S
+    for c in ("sa", "vu", "hbm", "ici", "sram"):
+        assert f"gated_frac_prog_{c}" in rec
+    assert rec["n_events"] > 0
+    assert rec["prog_cycles"] > 0
