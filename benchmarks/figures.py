@@ -1,9 +1,13 @@
 """One benchmark per paper table/figure. Each returns rows of
 (name, value, derived-note); benchmarks/run.py prints them as CSV.
 
-The figure benchmarks run on the columnar engine: per-workload service
-times come from ``compile_trace`` + ``trace_times`` and the policy/knob
-cross products go through ``repro.core.sweep.sweep``.
+The figure benchmarks run on the batched sweep plane: per-workload
+service times come from ``compile_trace`` + ``trace_times``, and each
+sweep-backed figure (Figs 17–23 and the knob-sensitivity studies) is a
+single ``repro.core.sweep.sweep`` call — one ``evaluate_batch`` pass
+over the stacked suite super-trace, no per-cell Python round-trips.
+The SLO search behind Fig 2 batches its (chips × batch × generation)
+candidate grid the same way.
 """
 from __future__ import annotations
 

@@ -1,23 +1,31 @@
-"""Reproduce the paper's headline analysis end-to-end: Figs 3/17/19/24
-numbers for the whole Table-1 suite, plus the NPU-generation sweep.
+"""Reproduce the paper's headline analysis end-to-end on the batched
+sweep plane: Figs 3/17/19/24 numbers for the whole Table-1 suite, the
+NPU-generation sweep, and a full delay-scale knob-grid sensitivity
+study — each section is ONE batched ``sweep`` call (suite × npus ×
+policies × knobs evaluated in a handful of array passes), so the whole
+study runs in seconds.
 
   PYTHONPATH=src python examples/power_gating_study.py
 """
 import statistics
+import time
 
 from repro.core.carbon import yearly_carbon
 from repro.core.hw import NPUS
 from repro.core.opgen import paper_suite
-from repro.core.policies import POLICIES, evaluate_all, savings_vs_nopg
+from repro.core.policies import POLICIES, PolicyKnobs, evaluate_all, \
+    savings_vs_nopg
+from repro.core.sweep import group_by, sweep, with_savings
 
 
 def main():
+    t_start = time.perf_counter()
     print(f"{'workload':24s} {'static%':>8s} "
           + "".join(f"{p:>13s}" for p in POLICIES[1:])
           + f" {'ovFull%':>9s} {'carbon%':>9s}")
     per_policy = {p: [] for p in POLICIES[1:]}
     for wl in paper_suite():
-        reps = evaluate_all(wl, "NPU-D")
+        reps = evaluate_all(wl, "NPU-D")  # one batched pass, all policies
         sv = savings_vs_nopg(reps)
         ov = reps["ReGate-Full"].runtime_s / reps["NoPG"].runtime_s - 1
         c_no = yearly_carbon(reps["NoPG"].avg_power_w, "NPU-D", False)
@@ -34,12 +42,36 @@ def main():
     print("paper:    ReGate-Full 8.5-32.8% (avg 15.5%), overhead <0.5%, "
           "carbon 31.1-62.9%")
 
-    print("\nper-generation ReGate-Full savings (paper Fig 23):")
-    for gen in NPUS:
-        vals = [savings_vs_nopg(evaluate_all(w, gen))["ReGate-Full"]
-                for w in paper_suite()]
+    # --- Fig 23: all 5 generations in ONE batched sweep ---
+    print("\nper-generation ReGate-Full savings (paper Fig 23, one "
+          "batched sweep over suite x 5 gens):")
+    recs = with_savings(sweep(paper_suite(), npus=tuple(NPUS),
+                              policies=("NoPG", "ReGate-Full")))
+    for (gen,), rows in group_by(recs, "npu").items():
+        vals = [r["savings"] for r in rows if r["policy"] == "ReGate-Full"]
         print(f"  {gen}: avg {statistics.mean(vals)*100:.1f}%  "
               f"range {min(vals)*100:.1f}-{max(vals)*100:.1f}%")
+
+    # --- Fig 22-style knob-grid study: suite x 6 delay scales, one call;
+    # NoPG is knob-insensitive, so the baseline rides the knob-0 cell and
+    # with_savings falls back to it for the other knob points ---
+    scales = (0.25, 0.5, 1.0, 2.0, 4.0, 8.0)
+    grid = [PolicyKnobs(delay_scale=s) for s in scales]
+    full = sweep(paper_suite(), policies=("NoPG", "ReGate-Full"),
+                 knob_grid=grid)
+    pruned = [r for r in full
+              if r["policy"] != "NoPG" or r["knob_idx"] == 0]
+    recs = with_savings(pruned)
+    print(f"\ndelay-scale sensitivity (suite x {len(scales)}-point knob "
+          "grid, one batched sweep):")
+    for (ki,), rows in group_by(recs, "knob_idx").items():
+        fullr = [r for r in rows if r["policy"] == "ReGate-Full"]
+        if not fullr:
+            continue
+        sv = statistics.mean(r["savings"] for r in fullr)
+        print(f"  delay x{scales[ki]:<5g} ReGate-Full avg savings "
+              f"{sv*100:.1f}%")
+    print(f"\ntotal study wall time: {time.perf_counter()-t_start:.2f}s")
 
 
 if __name__ == "__main__":

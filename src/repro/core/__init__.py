@@ -7,17 +7,19 @@ opgen/policies— operator traces, columnar trace compilation, and the five
                 designs (§6): vectorized ``evaluate`` + scalar
                 ``evaluate_reference`` oracle
 sweep         — batched design-space sweeps (workloads × npus × policies
-                × knob grids) over the columnar engine
+                × knob grids): one ``evaluate_batch`` pass over the
+                stacked super-trace; ``sweep_reference`` loop oracle
 carbon        — operational/embodied carbon (Figs 24-25)
 slo           — SLO-constrained config sweep (Fig 2)
 hlo/roofline  — compiled-HLO cost extraction for the dry-run
 """
 from repro.core.hw import NPUS, TARGET, get_npu
-from repro.core.opgen import compile_trace
+from repro.core.opgen import compile_trace, stack_traces
 from repro.core.policies import POLICIES, evaluate, evaluate_all, \
-    evaluate_reference, savings_vs_nopg
-from repro.core.sweep import sweep
+    evaluate_batch, evaluate_reference, savings_vs_nopg
+from repro.core.sweep import sweep, sweep_reference
 
 __all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "compile_trace",
-           "evaluate", "evaluate_all", "evaluate_reference",
-           "savings_vs_nopg", "sweep"]
+           "stack_traces", "evaluate", "evaluate_all", "evaluate_batch",
+           "evaluate_reference", "savings_vs_nopg", "sweep",
+           "sweep_reference"]

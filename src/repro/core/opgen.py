@@ -136,6 +136,153 @@ def _compile_trace(wl: Workload) -> TraceArrays:
 
 
 # --------------------------------------------------------------------------
+# Ragged trace stacking (the batched sweep plane's super-trace)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True, eq=False)
+class StackedTrace:
+    """Ragged stack of per-workload ``TraceArrays``: one concatenated op
+    stream plus segment bookkeeping.
+
+    ``offsets`` (W+1,) holds the op-range of workload ``w`` as
+    ``[offsets[w], offsets[w+1])``; ``seg_ids`` (N,) maps each op back to
+    its workload. The batched policy engine
+    (``repro.core.policies.evaluate_batch``) runs its array passes over
+    the full stack and recovers per-workload results with segmented
+    reductions, so gap merging and every other cross-op accumulation is
+    bounded by the segment — idle intervals never leak across workload
+    boundaries.
+
+    ``_derived`` caches per-NPU stacked service times and idle-gap
+    structures (keyed by spec identity, same convention as
+    ``TraceArrays._derived``).
+    """
+
+    traces: tuple[TraceArrays, ...]
+    names: tuple[str, ...]         # workload names, one per segment
+    n_ops: int
+    offsets: np.ndarray            # i8 (W+1,) op-range starts, last = n_ops
+    seg_ids: np.ndarray            # i8 (N,) workload index per op
+    flops_sa: np.ndarray           # f8 (N,) concatenated columns
+    flops_vu: np.ndarray
+    bytes_hbm: np.ndarray
+    bytes_ici: np.ndarray
+    sram_demand: np.ndarray
+    count: np.ndarray
+    collective: np.ndarray         # bool
+    has_mm: np.ndarray             # bool
+    _derived: dict = field(default_factory=dict, compare=False, repr=False)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.names)
+
+
+# Keyed by the tuple of compiled-trace ids. The cached StackedTrace holds
+# strong references to its traces, so the ids stay valid for exactly as
+# long as the entry exists; a small FIFO bound keeps ad-hoc sweeps from
+# growing the cache without limit.
+_STACK_CACHE: dict[tuple[int, ...], "StackedTrace"] = {}
+_STACK_CACHE_MAX = 64
+
+
+def stack_traces(workloads) -> StackedTrace:
+    """Stack the compiled traces of ``workloads`` into one super-trace.
+
+    Accepts a single Workload or a sequence; results are cached by the
+    identity tuple of the compiled traces (compilation itself is cached
+    per workload), so repeated sweeps over the same suite stack once.
+    """
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    workloads = list(workloads)
+    traces = tuple(compile_trace(wl) for wl in workloads)
+    # a key hit implies identity: the entry holds strong refs to exactly
+    # the traces whose ids form its key, so those ids cannot be reused
+    key = tuple(id(tr) for tr in traces)
+    hit = _STACK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    lengths = np.array([tr.n_ops for tr in traces], np.int64)
+    offsets = np.zeros(len(traces) + 1, np.int64)
+    np.cumsum(lengths, out=offsets[1:])
+    n = int(offsets[-1])
+    seg_ids = np.repeat(np.arange(len(traces), dtype=np.int64), lengths)
+
+    def cat(attr, dtype):
+        if not traces:
+            return np.zeros(0, dtype)
+        return np.concatenate([getattr(tr, attr) for tr in traces])
+
+    st = StackedTrace(
+        traces=traces, names=tuple(wl.name for wl in workloads),
+        n_ops=n, offsets=offsets, seg_ids=seg_ids,
+        flops_sa=cat("flops_sa", np.float64),
+        flops_vu=cat("flops_vu", np.float64),
+        bytes_hbm=cat("bytes_hbm", np.float64),
+        bytes_ici=cat("bytes_ici", np.float64),
+        sram_demand=cat("sram_demand", np.float64),
+        count=cat("count", np.float64),
+        collective=cat("collective", bool),
+        has_mm=cat("has_mm", bool),
+    )
+    if len(_STACK_CACHE) >= _STACK_CACHE_MAX:
+        _STACK_CACHE.pop(next(iter(_STACK_CACHE)))
+    _STACK_CACHE[key] = st
+    return st
+
+
+def segment_sum(arr: np.ndarray, offsets: np.ndarray) -> np.ndarray:
+    """Per-segment row sums: ``arr`` (N, ...) -> (W, ...) for the ragged
+    segmentation ``offsets`` (W+1,).
+
+    Empty segments sum to zero (``np.add.reduceat`` alone mishandles
+    degenerate bounds). Within a segment the accumulation is
+    left-to-right, matching the scalar engines' sequential ``+=`` order.
+    """
+    n_seg = len(offsets) - 1
+    out = np.zeros((n_seg,) + arr.shape[1:], np.float64)
+    if n_seg == 0 or arr.shape[0] == 0:
+        return out
+    starts = np.asarray(offsets[:-1], np.int64)
+    nonempty = np.asarray(offsets[1:], np.int64) > starts
+    if nonempty.any():
+        # empty segments span zero rows, so chunks between consecutive
+        # non-empty starts cover exactly one segment each
+        out[nonempty] = np.add.reduceat(arr, starts[nonempty], axis=0)
+    return out
+
+
+def segmented_gaps(active: np.ndarray, idle: np.ndarray,
+                   offsets: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Merged idle-gap lengths per segment — the stacked counterpart of
+    the policy engine's per-workload ``_merged_gaps``.
+
+    ``active``/``idle`` are per-op over the whole stack (idle holds
+    dur*count where the component is inactive, 0 where active). Each
+    segment contributes one gap per active op (the merged idle time since
+    the previous active op *within the segment*) plus one trailing gap;
+    segment boundaries always break a gap, so idle time never merges
+    across workloads. Returns ``(gap_vals, gap_offsets)`` where
+    ``gap_offsets`` (W+1,) slices ``gap_vals`` per segment.
+    """
+    n_seg = len(offsets) - 1
+    idx = np.flatnonzero(active)
+    # a bound both ends the previous gap and starts the next one; segment
+    # starts are always bounds, so chunks never span two workloads
+    bounds = np.union1d(np.asarray(offsets[:-1], np.int64), idx + 1)
+    idle2 = np.append(idle, 0.0)
+    if bounds.size == 0:
+        return np.zeros(0), np.zeros(n_seg + 1, np.int64)
+    gap_vals = np.add.reduceat(idle2, bounds)
+    # chunk ownership: the segment containing the chunk's starting bound
+    gseg = np.minimum(np.searchsorted(offsets, bounds, side="right") - 1,
+                      n_seg - 1)
+    gap_offsets = np.searchsorted(gseg, np.arange(n_seg + 1))
+    return gap_vals, gap_offsets
+
+
+# --------------------------------------------------------------------------
 # Helpers
 # --------------------------------------------------------------------------
 

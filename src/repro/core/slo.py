@@ -15,7 +15,7 @@ from typing import Callable, Optional
 
 from repro.core.hw import NPUS, get_npu
 from repro.core.opgen import Workload, llm_workload
-from repro.core.sweep import sweep
+from repro.core.sweep import group_by, sweep
 
 
 @dataclass(frozen=True)
@@ -38,17 +38,19 @@ def _work_units(phase: str, batch: int) -> float:
     return float(batch)                # requests (prefill) / tokens (decode)
 
 
-def _measure_batch(model: str, phase: str, npu: str,
-                   configs: list[tuple[int, int]]) -> list[SweepPoint]:
-    """Evaluate all (n_chips, batch) candidates through one sweep() call
-    (the engine reuses each compiled trace across cells)."""
+def _config_workloads(model: str, phase: str,
+                      configs: list[tuple[int, int]]) -> list[Workload]:
     wls = []
     for n_chips, batch in configs:
         tp = min(n_chips, 8)
         dp = max(1, n_chips // tp)
         wls.append(llm_workload(model, phase, batch=batch, n_chips=n_chips,
                                 tp=tp, dp=dp))
-    recs = sweep(wls, npus=(npu,), policies=("NoPG",))
+    return wls
+
+
+def _points(recs: list[dict], configs: list[tuple[int, int]],
+            phase: str, npu: str) -> list[SweepPoint]:
     out = []
     for (n_chips, batch), rec in zip(configs, recs):
         work = _work_units(phase, batch)
@@ -56,6 +58,15 @@ def _measure_batch(model: str, phase: str, npu: str,
                               work / rec["runtime_s"],
                               rec["total_j"] * n_chips, work))
     return out
+
+
+def _measure_batch(model: str, phase: str, npu: str,
+                   configs: list[tuple[int, int]]) -> list[SweepPoint]:
+    """Evaluate all (n_chips, batch) candidates through one batched
+    sweep() call (one stacked trace, one set of array passes)."""
+    wls = _config_workloads(model, phase, configs)
+    recs = sweep(wls, npus=(npu,), policies=("NoPG",))
+    return _points(recs, configs, phase, npu)
 
 
 def _measure(model: str, phase: str, npu: str, n_chips: int,
@@ -96,11 +107,23 @@ def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
     slo_perf_per_chip = ref.perf / ref.n_chips / slo_relax
 
     out: dict = {"_slo": slo_perf_per_chip}
+    # all generations ride ONE batched sweep: build each (chips, batch)
+    # candidate workload once (instead of per generation) and evaluate
+    # the full (config × generation) grid in a single stacked pass;
+    # per-generation HBM-capacity filtering happens on the records.
+    fits = {gen: {(n, b) for n in chip_counts for b in batches
+                  if hbm_fits(model, gen, n, b, phase)} for gen in gens}
+    union = [(n, b) for n in chip_counts for b in batches
+             if any((n, b) in fits[gen] for gen in gens)]
+    wls = _config_workloads(model, phase, union)
+    recs = sweep(wls, npus=gens, policies=("NoPG",))
+    by_gen = group_by(recs, "npu")  # workload-major order within each gen
     for gen in gens:
-        configs = [(n, b) for n in chip_counts for b in batches
-                   if hbm_fits(model, gen, n, b, phase)]
+        gen_recs = by_gen.get((get_npu(gen).name,), [])
         best: Optional[SweepPoint] = None
-        for pt in _measure_batch(model, phase, gen, configs):
+        for cfg, pt in zip(union, _points(gen_recs, union, phase, gen)):
+            if cfg not in fits[gen]:
+                continue
             if pt.perf / pt.n_chips < slo_perf_per_chip:
                 continue
             if best is None or pt.efficiency > best.efficiency:

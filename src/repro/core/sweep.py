@@ -3,14 +3,18 @@
 ``sweep`` evaluates the cross product ``workloads × npus × policies ×
 knob_grid`` and returns a flat record table (one dict per cell) — the
 common substrate for the figure benchmarks (Figs 17–23), the SLO
-configuration search, and CompPow-style what-if exploration. Because the
-engine compiles each workload to ``TraceArrays`` once and caches the
-per-NPU service times on the trace, the marginal cost of an extra policy
-or knob setting is a handful of array passes, not a re-walk of the op
-stream.
+configuration search, and CompPow-style what-if exploration. The whole
+grid runs through ``policies.evaluate_batch``: the workload traces are
+stacked into one ragged super-trace, per-(trace, npu) service times are
+reused across the policy/knob axes, and the records fall out of a
+handful of segmented array passes — no per-cell Python round-trips.
+
+``sweep_reference`` keeps the original one-``evaluate``-call-per-cell
+loop as the oracle; ``benchmarks/perf_sweep.py`` gates the batched path
+≥10× faster with record-for-record ≤1e-9 relative equivalence.
 
 Records are emitted in deterministic order: workload-major, then NPU,
-then policy, then knob index.
+then policy, then knob index (both paths, byte-identical ordering).
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ from typing import Iterable, Optional, Sequence
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.opgen import Workload, compile_trace
 from repro.core.policies import (POLICIES, EnergyReport, PolicyKnobs,
-                                 evaluate)
+                                 evaluate, evaluate_batch)
 from repro.core.power import COMPONENTS
 
 
@@ -54,7 +58,28 @@ def sweep(workloads: Sequence[Workload] | Workload,
           npus: Iterable[NPUSpec | str] = ("NPU-D",),
           policies: Iterable[str] = POLICIES,
           knob_grid: Optional[Sequence[PolicyKnobs]] = None) -> list[dict]:
-    """Evaluate every (workload, npu, policy, knobs) cell; flat records."""
+    """Evaluate every (workload, npu, policy, knobs) cell in one batched
+    pass; flat records."""
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    if knob_grid is None:
+        knob_grid = [PolicyKnobs()]
+    npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
+    return evaluate_batch(workloads, npu_specs, tuple(policies),
+                          tuple(knob_grid)).records()
+
+
+def sweep_reference(workloads: Sequence[Workload] | Workload,
+                    npus: Iterable[NPUSpec | str] = ("NPU-D",),
+                    policies: Iterable[str] = POLICIES,
+                    knob_grid: Optional[Sequence[PolicyKnobs]] = None) \
+        -> list[dict]:
+    """The original loop sweep — one ``evaluate`` round-trip per cell.
+
+    Kept as the oracle for the batched path: same records, same
+    deterministic ordering; ``tests/test_sweep_batch.py`` holds the two
+    to ≤1e-9 relative on every record field.
+    """
     if isinstance(workloads, Workload):
         workloads = [workloads]
     if knob_grid is None:
@@ -90,16 +115,32 @@ def sweep_program_plane(workloads: Sequence[Workload] | Workload,
 
 def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     """Attach ``savings`` (1 - total_j/baseline_total_j) to each record,
-    matching records to their baseline within the same
-    (workload, npu, knob_idx) cell. Baseline rows get savings 0.0; cells
-    without a baseline row get savings None."""
+    in one bulk pass over the batched record table.
+
+    A record's baseline is the ``baseline``-policy row of the same
+    (workload, npu, knob_idx) cell. When that exact cell is missing,
+    the un-gated ``NoPG`` baseline may fall back to the single knob
+    point it was evaluated at — e.g. a knob grid that only evaluates the
+    baseline at knob 0, which is sound because NoPG never gates and so
+    no knob can change its energy. Gating baselines get no such
+    fallback (their energy IS knob-sensitive; a knob-mismatched
+    denominator would be silently wrong). Baseline rows get savings
+    0.0; cells with no resolvable baseline get savings None.
+    """
     base: dict[tuple, float] = {}
+    per_cell: dict[tuple, list[float]] = {}
     for r in records:
         if r["policy"] == baseline:
             base[(r["workload"], r["npu"], r["knob_idx"])] = r["total_j"]
+            per_cell.setdefault((r["workload"], r["npu"]), []) \
+                .append(r["total_j"])
+    fallback = {k: v[0] for k, v in per_cell.items()
+                if len(v) == 1} if baseline == "NoPG" else {}
     out = []
     for r in records:
         b = base.get((r["workload"], r["npu"], r["knob_idx"]))
+        if b is None:
+            b = fallback.get((r["workload"], r["npu"]))
         r = dict(r)
         r["savings"] = None if b is None else 1.0 - r["total_j"] / b
         out.append(r)
