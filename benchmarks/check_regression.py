@@ -10,15 +10,27 @@ upload-only artifacts and start failing PRs.
       BENCH_timeline_executor.json:BENCH_timeline_executor.new.json \
       [--metric speedup] [--max-regression 0.30]
 
-Each positional argument is ``baseline:fresh``. Improvements always
-pass; a missing baseline file is an error (commit one with the PR that
-introduces the benchmark).
+Each positional argument is ``baseline:fresh``. With no positional
+arguments the registered ``DEFAULT_PAIRS`` are checked (every
+benchmark that commits a baseline registers itself there).
+Improvements always pass; a missing baseline file is an error (commit
+one with the PR that introduces the benchmark).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+# every committed BENCH_*.json baseline and its fresh CI counterpart;
+# new benchmarks register here so `python -m benchmarks.check_regression`
+# with no arguments covers the full set
+DEFAULT_PAIRS = [
+    "BENCH_policy_engine.json:BENCH_policy_engine.new.json",
+    "BENCH_timeline_executor.json:BENCH_timeline_executor.new.json",
+    "BENCH_sweep.json:BENCH_sweep.new.json",
+    "BENCH_sweep_jax.json:BENCH_sweep_jax.new.json",
+]
 
 
 def check_pair(baseline_path: str, fresh_path: str, metric: str,
@@ -42,8 +54,10 @@ def check_pair(baseline_path: str, fresh_path: str, metric: str,
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("pairs", nargs="+", metavar="BASELINE:FRESH",
-                    help="baseline and fresh JSON paths, colon-separated")
+    ap.add_argument("pairs", nargs="*", metavar="BASELINE:FRESH",
+                    default=DEFAULT_PAIRS,
+                    help="baseline and fresh JSON paths, colon-separated "
+                         "(default: the registered DEFAULT_PAIRS)")
     ap.add_argument("--metric", default="speedup")
     ap.add_argument("--max-regression", type=float, default=0.30,
                     help="allowed fractional drop vs baseline")

@@ -17,6 +17,12 @@ ordering. Writes ``BENCH_sweep.json``; the gate is speedup >= 10x AND
 equivalence, enforced in CI together with ``check_regression.py``.
 
   PYTHONPATH=src python -m benchmarks.perf_sweep [--out PATH]
+                                                 [--backend numpy|jax]
+
+``--backend jax`` runs the batched side on the jitted jax backend
+(``benchmarks/perf_sweep_jax.py`` is the dedicated jax gate on the
+100k-cell fine grid; this flag is for ad-hoc A/B on the 1700-cell
+grid).
 """
 from __future__ import annotations
 
@@ -58,18 +64,19 @@ def _max_rel_dev(ref: list[dict], bat: list[dict]) -> float:
 
 
 def run(out_path: str = "BENCH_sweep.json",
-        reps_batched: int = 3) -> dict:
+        reps_batched: int = 3, backend: str = "numpy") -> dict:
     suite = paper_suite()
     npus = tuple(NPUS)
     n_cells = len(suite) * len(npus) * len(POLICIES) * len(KNOB_GRID)
 
     # --- batched sweep plane (best of N; trace/stack caches warm after
-    # the first pass, so the min measures the steady-state sweep cost) ---
+    # the first pass, so the min measures the steady-state sweep cost;
+    # on --backend jax the first pass also compiles the program) ---
     t_bat = float("inf")
     for _ in range(reps_batched):
         t0 = time.perf_counter()
         batched = sweep(suite, npus=npus, policies=POLICIES,
-                        knob_grid=KNOB_GRID)
+                        knob_grid=KNOB_GRID, backend=backend)
         t_bat = min(t_bat, time.perf_counter() - t0)
     assert len(batched) == n_cells
 
@@ -86,6 +93,7 @@ def run(out_path: str = "BENCH_sweep.json",
     max_dev = _max_rel_dev(reference, batched)
 
     result = {
+        "backend": backend,
         "workloads": len(suite),
         "npus": len(npus),
         "policies": len(POLICIES),
@@ -106,15 +114,33 @@ def run(out_path: str = "BENCH_sweep.json",
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_sweep.json")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default BENCH_sweep.json; a "
+                         "non-numpy backend defaults to "
+                         "BENCH_sweep.<backend>.json so an ad-hoc A/B "
+                         "run cannot dirty the committed numpy "
+                         "baseline)")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="array backend for the batched path (the loop "
+                         "oracle always runs eager numpy)")
     args = ap.parse_args(argv)
-    r = run(args.out)
+    out = args.out if args.out is not None else (
+        "BENCH_sweep.json" if args.backend == "numpy"
+        else f"BENCH_sweep.{args.backend}.json")
+    r = run(out, backend=args.backend)
     for k, v in r.items():
         print(f"{k}: {v}")
-    ok = (r["speedup"] >= 10.0 and r["max_rel_dev"] <= RTOL
+    # the >=10x contract is the numpy batched plane's CI gate; on the
+    # small 1700-cell grid the jax backend is dominated by fixed
+    # per-call dispatch/transfer cost, so the ad-hoc --backend jax run
+    # only sanity-gates >=2x here — its real gate is
+    # benchmarks/perf_sweep_jax.py at 100k-cell scale
+    min_speedup = 10.0 if args.backend == "numpy" else 2.0
+    ok = (r["speedup"] >= min_speedup and r["max_rel_dev"] <= RTOL
           and r["ordering_identical"])
-    print(f"gate(speedup>=10x & rel_dev<={RTOL:g} & same order): "
-          f"{'PASS' if ok else 'FAIL'}")
+    print(f"gate(speedup>={min_speedup:g}x & rel_dev<={RTOL:g} & "
+          f"same order): {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 
 

@@ -3,10 +3,15 @@ dry-run roofline table. Prints ``name,value,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig17,fig19] [--list]
                                           [--json BENCH_figures.json]
+                                          [--backend numpy|jax]
 
 ``--json`` additionally writes a machine-readable artifact with every
 row plus per-benchmark wall times, so the perf trajectory of the
 simulator itself lands in version-controlled ``BENCH_*.json`` files.
+``--backend`` sets the session-default array backend
+(``repro.core.backend.set_default_backend``) so every batched sweep a
+figure runs — without threading a flag through each function — executes
+on the chosen substrate.
 """
 from __future__ import annotations
 
@@ -23,7 +28,13 @@ def main(argv=None) -> int:
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows + timings to this JSON file")
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="session-default array backend for all sweeps")
     args = ap.parse_args(argv)
+
+    if args.backend:
+        from repro.core.backend import set_default_backend
+        set_default_backend(args.backend)
 
     from benchmarks.figures import REGISTRY
     from benchmarks import arch_power, roofline_table

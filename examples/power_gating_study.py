@@ -5,8 +5,18 @@ study — each section is ONE batched ``sweep`` call (suite × npus ×
 policies × knobs evaluated in a handful of array passes), so the whole
 study runs in seconds.
 
-  PYTHONPATH=src python examples/power_gating_study.py
+  PYTHONPATH=src python examples/power_gating_study.py [--backend jax]
+                                                       [--fine-grid]
+
+``--backend jax`` steers every sweep onto the jitted jax array backend;
+``--fine-grid`` adds a §6.5-style ``sweep_grid`` sensitivity cube
+(suite × 5 generations × {NoPG, ReGate-Full} × 240 crossed knobs =
+40 800 cells — practical interactively because the jax backend
+compiles the grid once; the per-workload sections pay one small
+compile per distinct stack shape, so the jax backend shines on the
+big repeated grids, not the 1-cell calls).
 """
+import argparse
 import statistics
 import time
 
@@ -15,10 +25,41 @@ from repro.core.hw import NPUS
 from repro.core.opgen import paper_suite
 from repro.core.policies import POLICIES, PolicyKnobs, evaluate_all, \
     savings_vs_nopg
-from repro.core.sweep import group_by, sweep, with_savings
+from repro.core.sweep import group_by, sweep, sweep_grid, with_savings
 
 
-def main():
+def fine_grid_study():
+    """CompPow-style fine-knob cube: where does ReGate-Full's saving
+    move fastest? One ``sweep_grid`` call, min/max over the cube."""
+    t0 = time.perf_counter()
+    recs = sweep_grid(
+        paper_suite(), npus=tuple(NPUS),
+        policies=("NoPG", "ReGate-Full"),
+        delay_scale=(0.25, 0.5, 1.0, 2.0, 4.0, 8.0),
+        leak_off_logic=(0.01, 0.03, 0.1, 0.2, 0.4),
+        leak_sram_sleep=(0.1, 0.25, 0.4, 0.6),
+        leak_sram_off=(0.002, 0.02))
+    recs = with_savings(recs)
+    print(f"\nfine-grid cube: {len(recs)} cells in "
+          f"{time.perf_counter() - t0:.2f}s")
+    for (gen,), rows in group_by(recs, "npu").items():
+        sv = [r["savings"] for r in rows if r["policy"] == "ReGate-Full"]
+        print(f"  {gen}: ReGate-Full savings across the knob cube "
+              f"{min(sv)*100:.1f}% .. {max(sv)*100:.1f}%")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="array backend for every sweep in the study")
+    ap.add_argument("--fine-grid", action="store_true",
+                    help="also run the 40,800-cell sensitivity cube "
+                         "(suite x 5 gens x {NoPG, ReGate-Full} x 240 "
+                         "crossed knobs)")
+    args = ap.parse_args(argv)
+    if args.backend:
+        from repro.core.backend import set_default_backend
+        set_default_backend(args.backend)
     t_start = time.perf_counter()
     print(f"{'workload':24s} {'static%':>8s} "
           + "".join(f"{p:>13s}" for p in POLICIES[1:])
@@ -71,6 +112,8 @@ def main():
         sv = statistics.mean(r["savings"] for r in fullr)
         print(f"  delay x{scales[ki]:<5g} ReGate-Full avg savings "
               f"{sv*100:.1f}%")
+    if args.fine_grid:
+        fine_grid_study()
     print(f"\ntotal study wall time: {time.perf_counter()-t_start:.2f}s")
 
 

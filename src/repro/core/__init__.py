@@ -8,18 +8,26 @@ opgen/policies— operator traces, columnar trace compilation, and the five
                 ``evaluate_reference`` oracle
 sweep         — batched design-space sweeps (workloads × npus × policies
                 × knob grids): one ``evaluate_batch`` pass over the
-                stacked super-trace; ``sweep_reference`` loop oracle
+                stacked super-trace; ``sweep_reference`` loop oracle;
+                ``sweep_grid`` fine-knob §6.5 grids (100k-cell scale)
+backend       — pluggable array substrate for the batched plane: numpy
+                (oracle) or one jitted float64 jax program (≤1e-9
+                equivalent, reused across NPU generations)
 carbon        — operational/embodied carbon (Figs 24-25)
 slo           — SLO-constrained config sweep (Fig 2)
 hlo/roofline  — compiled-HLO cost extraction for the dry-run
 """
+from repro.core.backend import (default_backend, get_backend,
+                                set_default_backend)
 from repro.core.hw import NPUS, TARGET, get_npu
 from repro.core.opgen import compile_trace, stack_traces
 from repro.core.policies import POLICIES, evaluate, evaluate_all, \
     evaluate_batch, evaluate_reference, savings_vs_nopg
-from repro.core.sweep import sweep, sweep_reference
+from repro.core.sweep import knob_product, sweep, sweep_grid, \
+    sweep_reference
 
 __all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "compile_trace",
            "stack_traces", "evaluate", "evaluate_all", "evaluate_batch",
            "evaluate_reference", "savings_vs_nopg", "sweep",
-           "sweep_reference"]
+           "sweep_grid", "sweep_reference", "knob_product",
+           "get_backend", "set_default_backend", "default_backend"]

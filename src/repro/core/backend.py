@@ -1,0 +1,274 @@
+"""Pluggable array backend for the batched sweep plane (ISSUE 4).
+
+The batched policy engine (``repro.core.policies.evaluate_batch``) is a
+handful of segmented array passes over a stacked super-trace. This
+module abstracts the array substrate those passes run on so the same
+backend-neutral kernel executes either on
+
+* **numpy** — eager, always available, and the production oracle; or
+* **jax**   — one ``jax.jit``-compiled program (knob axis via ``vmap``,
+  segmented reductions via ``jax.ops.segment_sum``), reused across NPU
+  generations because every per-generation quantity enters as a traced
+  array, never as a Python constant baked into the trace.
+
+The contract each backend provides:
+
+* ``xp``                    — the array namespace (``numpy`` /
+  ``jax.numpy``);
+* ``segment_sum(data, seg_ids, num_segments)`` — 1-D segmented sum with
+  sorted segment ids (empty segments sum to zero);
+* ``jit(fn, static_argnames)`` / ``vmap_knobs(fn, knobs)`` — compile and
+  knob-axis-map hooks (identity / Python loop on numpy);
+* ``asarray`` / ``to_numpy`` / ``compute_scope()`` — transfer in/out and
+  the dtype discipline scope (jax: float64 via x64).
+
+Ragged gap merging (``opgen.segmented_gaps``) is data-dependent-shape
+and cannot run under ``jit``; ``gap_index`` builds the equivalent
+fixed-shape structure on the host once per stack — each op is assigned
+the id of the idle-gap chunk that owns it, so the gap *values* become a
+plain ``segment_sum`` over per-op idle time and the per-knob threshold
+masking stays shape-stable inside the compiled program.
+
+The jax backend requires float64 (the ≤1e-9 record equivalence against
+the numpy oracle is meaningless at f32): entry points run inside
+``compute_scope()`` which enables x64 locally when jax supports the
+scoped switch, and otherwise raises a clear error telling the caller to
+enable ``jax_enable_x64`` globally.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+import numpy as np
+
+_X64_HELP = (
+    "the jax sweep backend requires float64 (x64). Enable it globally "
+    "before jax is first used — `import jax; "
+    "jax.config.update('jax_enable_x64', True)` or set the environment "
+    "variable JAX_ENABLE_X64=1 — or upgrade to a jax with the scoped "
+    "`jax.experimental.enable_x64` context manager."
+)
+
+
+def _tree_stack(items: list):
+    """Stack a list of identically-structured dict/array pytrees along a
+    new leading axis (the numpy stand-in for ``vmap`` output batching)."""
+    first = items[0]
+    if isinstance(first, dict):
+        return {k: _tree_stack([it[k] for it in items]) for k in first}
+    return np.stack(items, axis=0)
+
+
+class NumpyBackend:
+    """Eager numpy instantiation of the backend contract (the oracle)."""
+
+    name = "numpy"
+    xp = np
+
+    @staticmethod
+    def asarray(x):
+        a = np.asarray(x)
+        if a.dtype == np.float32:
+            a = a.astype(np.float64)
+        return a
+
+    @staticmethod
+    def to_numpy(x) -> np.ndarray:
+        return np.asarray(x)
+
+    @staticmethod
+    def segment_sum(data, seg_ids, num_segments: int):
+        return np.bincount(seg_ids, weights=np.asarray(data, np.float64),
+                           minlength=num_segments)[:num_segments]
+
+    @staticmethod
+    def jit(fn: Callable, static_argnames=()) -> Callable:
+        return fn
+
+    @staticmethod
+    def vmap_knobs(fn: Callable, knobs: dict) -> dict:
+        k = len(next(iter(knobs.values())))
+        return _tree_stack([fn({key: v[i] for key, v in knobs.items()})
+                            for i in range(k)])
+
+    @staticmethod
+    @contextlib.contextmanager
+    def compute_scope():
+        yield
+
+    @staticmethod
+    def block(tree):
+        return tree
+
+
+class JaxBackend:
+    """``jax.numpy`` instantiation: jit + vmap + x64 compute scope.
+
+    jax is imported lazily so ``repro.core`` keeps zero import-time jax
+    dependence; constructing the backend on a machine without jax raises
+    a clear error instead of poisoning module import.
+    """
+
+    name = "jax"
+
+    def __init__(self):
+        try:
+            import jax
+            import jax.numpy as jnp
+        except ImportError as e:  # pragma: no cover - jax ships in CI
+            raise RuntimeError(
+                "the 'jax' sweep backend needs jax installed; use "
+                "backend='numpy' or install jax") from e
+        self._jax = jax
+        self.xp = jnp
+        try:
+            from jax.experimental import enable_x64
+            self._x64_ctx: Optional[Callable] = enable_x64
+        except ImportError:  # pragma: no cover - future jax drift
+            self._x64_ctx = None
+
+    # -- x64 discipline ------------------------------------------------
+    def x64_enabled(self) -> bool:
+        return bool(self._jax.config.jax_enable_x64)
+
+    @contextlib.contextmanager
+    def compute_scope(self):
+        """All transfers, traces, and executions of the jax sweep path
+        run inside this scope so arrays stay float64 end-to-end."""
+        if self.x64_enabled():
+            yield
+        elif self._x64_ctx is not None:
+            with self._x64_ctx():
+                if not self.x64_enabled():  # pragma: no cover
+                    raise RuntimeError(_X64_HELP)
+                yield
+        else:
+            raise RuntimeError(_X64_HELP)
+
+    # -- array contract ------------------------------------------------
+    def asarray(self, x):
+        return self.xp.asarray(x)
+
+    def to_numpy(self, x) -> np.ndarray:
+        return np.asarray(x)
+
+    def segment_sum(self, data, seg_ids, num_segments: int):
+        import jax.ops
+        return jax.ops.segment_sum(data, seg_ids,
+                                   num_segments=num_segments,
+                                   indices_are_sorted=True)
+
+    def jit(self, fn: Callable, static_argnames=()) -> Callable:
+        return self._jax.jit(fn, static_argnames=static_argnames)
+
+    def vmap_knobs(self, fn: Callable, knobs: dict):
+        return self._jax.vmap(fn)(knobs)
+
+    def block(self, tree):
+        """Wait for async dispatch so wall-clock timings are honest."""
+        return self._jax.block_until_ready(tree)
+
+    # -- optional multi-device sharding --------------------------------
+    def op_axis_sharding(self, mesh):
+        """NamedSharding pair (shard-over-ops, replicated) for placing
+        the stacked-trace data on a ``jax_compat`` mesh. The op axis is
+        the workload axis of the stack (segments are spans of ops), so
+        sharding it spreads the per-op work across devices while the
+        (W,)-sized segmented outputs stay replicated."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        return (NamedSharding(mesh, PartitionSpec("wl")),
+                NamedSharding(mesh, PartitionSpec()))
+
+    def shard_data(self, data: dict, mesh) -> dict:
+        """Device-put a prepared data pytree: ``data["op"]`` leaves are
+        sharded along the op axis, everything else replicated."""
+        shard, repl = self.op_axis_sharding(mesh)
+        jax = self._jax
+
+        def put(tree, sh):
+            if isinstance(tree, dict):
+                return {k: put(v, sh) for k, v in tree.items()}
+            return jax.device_put(tree, sh)
+
+        return {k: put(v, shard if k == "op" else repl)
+                for k, v in data.items()}
+
+
+_BACKENDS: dict[str, object] = {}
+_DEFAULT_BACKEND = "numpy"
+
+BACKEND_NAMES = ("numpy", "jax")
+
+
+def get_backend(name: Optional[str] = None):
+    """Resolve a backend by name (``None`` → the session default).
+
+    Instances are cached: the jax backend holds jitted-program caches
+    that must survive across sweep calls for compile-once reuse.
+    """
+    if name is None:
+        name = _DEFAULT_BACKEND
+    bk = _BACKENDS.get(name)
+    if bk is not None:
+        return bk
+    if name == "numpy":
+        bk = NumpyBackend()
+    elif name == "jax":
+        bk = JaxBackend()
+    else:
+        raise KeyError(f"unknown array backend {name!r}; "
+                       f"have {BACKEND_NAMES}")
+    _BACKENDS[name] = bk
+    return bk
+
+
+def set_default_backend(name: str) -> str:
+    """Set the session default (what ``backend=None`` resolves to);
+    returns the previous default. Used by ``benchmarks/run.py
+    --backend`` to steer every sweep in a run without threading a flag
+    through each figure function."""
+    global _DEFAULT_BACKEND
+    if name not in BACKEND_NAMES:
+        raise KeyError(f"unknown array backend {name!r}; "
+                       f"have {BACKEND_NAMES}")
+    prev, _DEFAULT_BACKEND = _DEFAULT_BACKEND, name
+    return prev
+
+
+def default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+# --------------------------------------------------------------------------
+# fixed-shape gap indexing (host-side; replaces data-dependent reduceat)
+# --------------------------------------------------------------------------
+
+def gap_index(active: np.ndarray, offsets: np.ndarray) \
+        -> tuple[np.ndarray, np.ndarray]:
+    """Fixed-shape equivalent of ``opgen.segmented_gaps``'s chunking.
+
+    Returns ``(chunk_of_op, gap_seg)``: each op's owning idle-gap chunk
+    id (N,), and each chunk's segment id (G,). Chunks are delimited
+    exactly like ``segmented_gaps`` — a bound after every active op and
+    at every segment start, so idle runs never merge across workload
+    boundaries and empty segments own zero chunks. With this index the
+    per-chunk gap values are ``segment_sum(idle, chunk_of_op, G)`` —
+    shape-stable under ``jit`` — and per-(segment, knob) masked merges
+    are ``segment_sum`` over ``gap_seg``.
+
+    Depends only on the activity *pattern* (which ops use the
+    component), not on service times, so one index per (stack,
+    component) serves every NPU generation.
+    """
+    offsets = np.asarray(offsets, np.int64)
+    n_seg = len(offsets) - 1
+    idx = np.flatnonzero(active)
+    bounds = np.union1d(offsets[:-1], idx + 1)
+    if bounds.size == 0:  # no ops and no segments
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    n = len(active)
+    chunk_of_op = np.searchsorted(bounds, np.arange(n), side="right") - 1
+    gap_seg = np.minimum(np.searchsorted(offsets, bounds, side="right") - 1,
+                         max(n_seg - 1, 0))
+    return chunk_of_op.astype(np.int64), gap_seg.astype(np.int64)

@@ -239,13 +239,16 @@ def segment_sum(arr: np.ndarray, offsets: np.ndarray) -> np.ndarray:
     Empty segments sum to zero (``np.add.reduceat`` alone mishandles
     degenerate bounds). Within a segment the accumulation is
     left-to-right, matching the scalar engines' sequential ``+=`` order.
+    ``offsets`` is coerced to int64, so callers may pass any integral
+    dtype (or a Python list) without tripping ``reduceat``.
     """
+    offsets = np.asarray(offsets, np.int64)
     n_seg = len(offsets) - 1
     out = np.zeros((n_seg,) + arr.shape[1:], np.float64)
     if n_seg == 0 or arr.shape[0] == 0:
         return out
-    starts = np.asarray(offsets[:-1], np.int64)
-    nonempty = np.asarray(offsets[1:], np.int64) > starts
+    starts = offsets[:-1]
+    nonempty = offsets[1:] > starts
     if nonempty.any():
         # empty segments span zero rows, so chunks between consecutive
         # non-empty starts cover exactly one segment each
@@ -265,12 +268,19 @@ def segmented_gaps(active: np.ndarray, idle: np.ndarray,
     segment boundaries always break a gap, so idle time never merges
     across workloads. Returns ``(gap_vals, gap_offsets)`` where
     ``gap_offsets`` (W+1,) slices ``gap_vals`` per segment.
+
+    Empty (zero-op) segments own zero gaps — their slice of
+    ``gap_vals`` is empty and neighbouring segments keep their own
+    trailing/leading gaps, so a zero-op workload in a stack contributes
+    exactly nothing. (``repro.core.backend.gap_index`` is the
+    fixed-shape counterpart used under ``jit``.)
     """
+    offsets = np.asarray(offsets, np.int64)
     n_seg = len(offsets) - 1
     idx = np.flatnonzero(active)
     # a bound both ends the previous gap and starts the next one; segment
     # starts are always bounds, so chunks never span two workloads
-    bounds = np.union1d(np.asarray(offsets[:-1], np.int64), idx + 1)
+    bounds = np.union1d(offsets[:-1], idx + 1)
     idle2 = np.append(idle, 0.0)
     if bounds.size == 0:
         return np.zeros(0), np.zeros(n_seg + 1, np.int64)

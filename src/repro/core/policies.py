@@ -42,7 +42,14 @@ A third layer batches whole design-space sweeps:
   results across policies that share a component configuration. One
   call covers the full (workload × npu × policy × knob) cross product
   in a handful of array passes; cell-for-cell ≤1e-9 relative to
-  ``evaluate``.
+  ``evaluate``. Via ``backend="jax"`` the same sweep runs as one
+  ``jax.jit``-compiled float64 program (``repro.core.backend``): gap
+  chunking moves to a host-built fixed-shape index, per-NPU numbers
+  enter as traced arrays so one compiled program serves every
+  generation, and the knob axis is vmapped over the unique delay
+  scales with the leakage knobs folded in linearly afterwards —
+  record-for-record ≤1e-9 against the numpy path, which stays the
+  oracle.
 """
 from __future__ import annotations
 
@@ -52,6 +59,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import backend as backend_mod
+from repro.core.backend import gap_index, get_backend
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.opgen import (Op, StackedTrace, TraceArrays, Workload,
                               compile_trace, segment_sum, segmented_gaps,
@@ -1055,8 +1064,488 @@ def _vu_fine_cell(ctx, pol, kp, leak, static, overhead, wakes, setpm,
     wakes += NB
 
 
+# --------------------------------------------------------------------------
+# evaluation — backend-neutral sweep kernel (numpy or one jitted jax program)
+# --------------------------------------------------------------------------
+
+_BK_COMPS = ("sa", "vu", "hbm", "ici")
+
+
+def _cell_id(c: str, pol: _CompPolicy) -> str:
+    """String key for a distinct (component, policy-cell): pytree dict
+    keys must sort, so the frozen ``_CompPolicy`` is flattened."""
+    return f"{c}|{pol.mode}|{pol.delay_key}|{int(pol.spatial_sa)}"
+
+
+def _distinct_cells(policies) -> dict[str, tuple[str, _CompPolicy]]:
+    out: dict[str, tuple[str, _CompPolicy]] = {}
+    for p in policies:
+        cp = _component_policies(p)
+        for c in _BK_COMPS:
+            out.setdefault(_cell_id(c, cp[c]), (c, cp[c]))
+    return out
+
+
+def _sram_states(policies) -> tuple[str, ...]:
+    return tuple(dict.fromkeys(
+        _component_policies(p)["sram"].sram_state for p in policies))
+
+
+def _sweep_kernel(data, knobs, policies, bk):
+    """The whole ``_batch_ctx`` → ``_comp_cell`` assembly as one pure,
+    backend-neutral program over fixed-shape arrays.
+
+    ``data`` carries per-op columns, the host-built fixed-shape gap
+    index (``backend.gap_index`` — chunk ownership replaces the
+    data-dependent ``reduceat`` of ``segmented_gaps``), and per-NPU
+    scalars as 0-d arrays so one compiled program serves every NPU
+    generation. Distinct ``_CompPolicy`` cells are computed once and
+    shared across policies (same memoization as the numpy path, applied
+    at trace time).
+
+    The knob axis is factored: every gating threshold scales with
+    ``delay_scale`` only, and every leakage knob enters *linearly after*
+    the segmented reductions, so the O(n_ops)-sized masked merges run
+    through ``bk.vmap_knobs`` over the **unique** delay scales
+    (``knobs["dscale_unique"]``) and the full knob grid is assembled
+    from those primitives with O(W × K) linear algebra. A crossed
+    delay × leakage grid therefore costs ``len(unique delays)`` heavy
+    passes, not ``K``; a grid of all-distinct delays degrades to the
+    per-knob cost.
+
+    Returns ``(out, ctx)``: knob-dependent per-cell quantities as
+    (K, W) arrays, plus the knob-independent per-segment sums.
+    """
+    xp = bk.xp
+    op = data["op"]
+    offsets = data["offsets"]
+    scal = data["scal"]
+    w = offsets.shape[0] - 1
+    n = op["seg_ids"].shape[0]
+    seg = op["seg_ids"]
+
+    def segsum(v):
+        return bk.segment_sum(v, seg, w)
+
+    cnt, dur, durn = op["cnt"], op["dur"], op["durn"]
+    d_seg = segsum(durn)
+    comp: dict[str, dict] = {}
+    for c in _BK_COMPS:
+        a = op[f"t_{c}"]
+        active = a > 0
+        gseg = data["gap_seg"][c]
+        gap_vals = bk.segment_sum(xp.where(active, 0.0, durn),
+                                  op[f"chunk_{c}"], gseg.shape[0])
+        slack = xp.where(active, dur - a, 0.0)
+        comp[c] = {
+            "gap_vals": gap_vals, "gap_seg": gseg,
+            "S_gap": bk.segment_sum(gap_vals, gseg, w),
+            "slack": slack, "scnt": slack * cnt,
+            "S_slk": segsum(slack * cnt),
+            "acnt": a * cnt, "AN": segsum(a * cnt),
+        }
+    dyn = {c: scal[f"dyn_w_{c}"] * comp[c]["AN"]
+           for c in ("vu", "hbm", "ici")}
+    dyn["sa"] = scal["dyn_w_sa"] * segsum(
+        op["flops_sa"] / scal["sa_flops"] * cnt)
+    occ_ideal = xp.where(op["has_mm"], op["frac_on"], 1.0)
+    comp["sa"]["occ_ideal_AN"] = segsum(occ_ideal * comp["sa"]["acnt"])
+    # VU fine-grained burst structure (knob-independent parts)
+    vu = comp["vu"]
+    t_vu = op["t_vu"]
+    sel = (t_vu > 0) & (vu["slack"] > 0)
+    active_cy = xp.maximum(1.0, scal["freq"] * t_vu)
+    n_bursts = xp.maximum(1.0, active_cy / scal["vu_burst_cycles"])
+    gap_raw = scal["freq"] * vu["slack"] / n_bursts
+    psn = scal["static_w_vu"] * vu["slack"] * cnt
+    vu.update(sel=sel, nbn=n_bursts * cnt,
+              gap_cy=xp.where(sel, gap_raw, 0.0),
+              inv_gap=xp.where(sel, 1.0 / xp.where(sel, gap_raw, 1.0), 0.0),
+              psn=psn, PSN_seg=segsum(psn))
+    # SRAM capacity model (knob- and policy-independent parts)
+    used = op["sram_used"]
+    if n:
+        b = (used[1:] != used[:-1]) & (seg[1:] == seg[:-1])
+        changes = bk.segment_sum(xp.where(b, 1.0, 0.0), seg[1:], w)
+        starts = offsets[:-1]
+        nonempty = offsets[1:] > starts
+        first_used = used[xp.clip(starts, 0, n - 1)]
+        first = xp.where(nonempty & (first_used < 1.0), 1.0, 0.0)
+    else:
+        changes = xp.zeros(w)
+        first = xp.zeros(w)
+    ctx = {
+        "D_seg": d_seg, "dyn": dyn,
+        "sram_U": segsum(durn * used),
+        "sram_GU": segsum(durn * (1.0 - used)),
+        "sram_setpm": 2.0 * (changes + first),
+        "sram_dyn": scal["dyn_w_sram"] * 0.5 * segsum(op["max4"] * cnt),
+    }
+
+    cells = _distinct_cells(policies)
+    states = _sram_states(policies)
+
+    # SA spatial occupancy is linear in leak_logic with knob-independent
+    # segment sums: occ = A + leak_logic * B per op
+    occ_a = xp.where(op["has_mm"], op["frac_on"]
+                     + scal["leak_pe_weight_on"] * op["frac_w_on"], 1.0)
+    occ_b = xp.where(op["has_mm"], op["frac_off"], 0.0)
+    sa_occ_an_a = segsum(occ_a * comp["sa"]["acnt"])
+    sa_occ_an_b = segsum(occ_b * comp["sa"]["acnt"])
+
+    def heavy(kd):
+        """All O(n_ops)-sized masked merges for ONE delay scale: the
+        primitives every leakage knob assembles from linearly."""
+        d = kd["dscale"]
+        out = {}
+        for cid, (c, pol) in cells.items():
+            if pol.mode not in ("hw", "sw"):
+                continue  # none/ideal need no masked primitives
+            cc = comp[c]
+            bet = scal[f"bet_{pol.delay_key}"] * d / scal["freq"]
+            delay = scal[f"delay_{pol.delay_key}"] * d / scal["freq"]
+            window = bet * scal["window_frac"]
+            gv = cc["gap_vals"]
+            if pol.mode == "hw":
+                gmask = gv > window
+            else:
+                gmask = (gv >= xp.maximum(bet, 2.0 * delay)) & (gv > 0)
+            o = {"GM": bk.segment_sum(xp.where(gmask, gv, 0.0),
+                                      cc["gap_seg"], w),
+                 "GC": bk.segment_sum(xp.where(gmask, 1.0, 0.0),
+                                      cc["gap_seg"], w)}
+            if c == "vu":
+                # fine-grained burst slack (paper Fig 15): static energy
+                # is VA + leak * VB; VG is gated seconds, NB burst count
+                bet_cy = scal["bet_vu"] * d
+                delay_cy = scal["delay_vu"] * d
+                gap_cy = cc["gap_cy"]
+                psn_ = cc["psn"]
+                if pol.mode == "hw":
+                    window_cy = bet_cy * scal["window_frac"]
+                    gm = gap_cy > bet_cy
+                    gf = xp.maximum(0.0, 1.0 - window_cy * cc["inv_gap"])
+                    o["VA"] = segsum(xp.where(gm, psn_ * (1.0 - gf), psn_))
+                    o["VB"] = segsum(xp.where(gm, psn_ * gf, 0.0))
+                    o["VG"] = segsum(xp.where(gm, cc["scnt"] * gf, 0.0))
+                else:
+                    gm = cc["sel"] & (
+                        gap_cy >= xp.maximum(bet_cy, 2.0 * delay_cy))
+                    trans = 2.0 * delay_cy * cc["inv_gap"]
+                    o["VA"] = segsum(xp.where(gm, psn_ * trans, psn_))
+                    o["VB"] = segsum(
+                        xp.where(gm, psn_ * (1.0 - trans), 0.0))
+                    o["VG"] = segsum(
+                        xp.where(gm, cc["scnt"] * (1.0 - trans), 0.0))
+                o["NB"] = segsum(xp.where(gm, cc["nbn"], 0.0))
+            else:
+                slack = cc["slack"]
+                if pol.mode == "hw":
+                    smask = slack > window
+                else:
+                    smask = (slack >= xp.maximum(bet, 2.0 * delay)) \
+                        & (slack > 0)
+                o["SM"] = segsum(xp.where(smask, cc["scnt"], 0.0))
+                o["SC"] = segsum(xp.where(smask, cnt, 0.0))
+            out[cid] = o
+        return out
+
+    prims = bk.vmap_knobs(heavy, {"dscale": knobs["dscale_unique"]})
+    inv = knobs["dscale_inv"]
+
+    # ---- full-knob assembly: O(W × K) linear algebra on the primitives
+    k_full = knobs["dscale"].shape[0]
+    dscale = knobs["dscale"][:, None]          # (K, 1)
+    leak_logic = knobs["leak_logic"][:, None]
+
+    def cell(c, pol):
+        """(K, W) closed-form assembly of one ``_comp_cell``."""
+        cc = comp[c]
+        p = scal[f"static_w_{c}"]
+        leak = leak_logic
+        if c == "hbm":
+            # HBM auto-refresh floor (paper §6.5)
+            leak = xp.maximum(leak, scal["leak_hbm_refresh"])
+        acc = {q: xp.zeros((k_full, w)) for q in
+               ("static", "overhead", "wakes", "setpm", "gated")}
+        s_gap = cc["S_gap"]
+        gating = pol.mode in ("hw", "sw")
+        if gating:
+            pr = {q: a[inv] for q, a in prims[_cell_id(c, pol)].items()}
+            bet = scal[f"bet_{pol.delay_key}"] * dscale / scal["freq"]
+            delay = scal[f"delay_{pol.delay_key}"] * dscale / scal["freq"]
+            window = bet * scal["window_frac"]
+
+        # --- merged cross-op idle gaps (each closed once) ---
+        if pol.mode == "none":
+            acc["static"] = acc["static"] + p * s_gap
+        elif pol.mode == "ideal":
+            acc["gated"] = acc["gated"] + s_gap
+        else:
+            gm, gc = pr["GM"], pr["GC"]
+            if pol.mode == "hw":
+                acc["static"] = acc["static"] + p * (s_gap - gm) \
+                    + (p * window) * gc + (leak * p) * (gm - window * gc) \
+                    + (p * delay) * gc
+                acc["overhead"] = acc["overhead"] + delay * gc
+                acc["gated"] = acc["gated"] + gm - window * gc
+            else:
+                acc["static"] = acc["static"] + p * (s_gap - gm) \
+                    + (leak * p) * (gm - 2.0 * delay * gc) \
+                    + (p * 2.0 * delay) * gc
+                acc["setpm"] = acc["setpm"] + 2.0 * gc
+                acc["gated"] = acc["gated"] + gm - 2.0 * delay * gc
+            acc["wakes"] = acc["wakes"] + gc
+
+        # --- active-portion static (SA: PE-occupancy weighted) ---
+        if c == "sa" and pol.spatial_sa:
+            if pol.mode == "ideal":
+                acc["static"] = acc["static"] + p * cc["occ_ideal_AN"]
+            else:
+                acc["static"] = acc["static"] + p * (
+                    sa_occ_an_a + leak_logic * sa_occ_an_b)
+        else:
+            acc["static"] = acc["static"] + p * cc["AN"]
+
+        # --- within-op slack (per executed instance) ---
+        if c == "vu":
+            if pol.mode == "none":
+                acc["static"] = acc["static"] + cc["PSN_seg"]
+            elif pol.mode == "ideal":
+                acc["gated"] = acc["gated"] + cc["S_slk"]
+            else:
+                acc["static"] = acc["static"] + pr["VA"] + leak * pr["VB"]
+                acc["gated"] = acc["gated"] + pr["VG"]
+                nb = pr["NB"]
+                if pol.mode == "hw":
+                    # exposed wake per burst: HW cannot pre-wake
+                    acc["overhead"] = acc["overhead"] \
+                        + (scal["delay_vu"] * dscale / scal["freq"]) * nb
+                else:
+                    acc["setpm"] = acc["setpm"] + 2.0 * nb
+                acc["wakes"] = acc["wakes"] + nb
+        else:
+            s_slk = cc["S_slk"]
+            if pol.mode == "none":
+                acc["static"] = acc["static"] + p * s_slk
+            elif pol.mode == "ideal":
+                acc["gated"] = acc["gated"] + s_slk
+            else:
+                sm, cm = pr["SM"], pr["SC"]
+                if pol.mode == "hw":
+                    lo, hi = window, delay
+                    acc["static"] = acc["static"] + p * (s_slk - sm) \
+                        + (p * lo) * cm + (leak * p) * (sm - lo * cm) \
+                        + (p * hi) * cm
+                    acc["overhead"] = acc["overhead"] + hi * cm
+                else:
+                    lo = 2.0 * delay
+                    acc["static"] = acc["static"] + p * (s_slk - sm) \
+                        + (leak * p) * (sm - lo * cm) + (p * lo) * cm
+                    acc["setpm"] = acc["setpm"] + 2.0 * cm
+                acc["wakes"] = acc["wakes"] + cm
+                acc["gated"] = acc["gated"] + sm - lo * cm
+
+        if c in ("hbm", "ici"):
+            # wake overlapped with the long DMA issue latency half the time
+            acc["overhead"] = acc["overhead"] * 0.5
+        return acc
+
+    out_cells = {cid: cell(c, pol) for cid, (c, pol) in cells.items()}
+    out_sram = {}
+    for state in states:
+        lk = {"on": xp.ones((k_full, 1)),
+              "sleep": knobs["leak_sleep"][:, None],
+              "off": knobs["leak_off"][:, None]}.get(
+                  state, xp.zeros((k_full, 1)))
+        out_sram[state] = scal["static_w_sram"] * (
+            ctx["sram_U"] + lk * ctx["sram_GU"])
+    return {"cells": out_cells, "sram": out_sram}, ctx
+
+
+_KERNELS: dict[str, object] = {}
+
+
+def _backend_kernel(bk):
+    """The (possibly jitted) sweep kernel for one backend. Cached per
+    backend so the jax program compiles once per (stack shape, knob
+    count, policies) and is reused across NPU generations and repeated
+    sweeps."""
+    fn = _KERNELS.get(bk.name)
+    if fn is None:
+        def kern(data, knobs, policies):
+            return _sweep_kernel(data, knobs, policies, bk)
+        fn = bk.jit(kern, static_argnames=("policies",))
+        _KERNELS[bk.name] = fn
+    return fn
+
+
+def _gap_indices(st: StackedTrace) -> dict[str, tuple]:
+    """Fixed-shape gap-chunk indices per component — depend only on the
+    activity pattern and segmentation, so one set per stack serves every
+    NPU generation (cached on the stack)."""
+    hit = st._derived.get("gap_index")
+    if hit is None:
+        cols = {"sa": st.flops_sa, "vu": st.flops_vu,
+                "hbm": st.bytes_hbm, "ici": st.bytes_ici}
+        hit = {c: gap_index(cols[c] > 0, st.offsets) for c in _BK_COMPS}
+        st._derived["gap_index"] = hit
+    return hit
+
+
+def _backend_data(st: StackedTrace, npu: NPUSpec, bk) -> dict:
+    """Per-(stack, NPU) kernel input pytree, transferred to the backend
+    once and cached on the stack (spec-identity keyed, same convention
+    as ``_batch_ctx``). Per-NPU scalars enter as 0-d arrays so swapping
+    generations never retraces the compiled program."""
+    key = ("backend_data", bk.name, id(npu))
+    hit = st._derived.get(key)
+    if hit is not None and hit[0] is npu:
+        return hit[1]
+    tms = [trace_times(tr, npu) for tr in st.traces]
+
+    def cat(k):
+        if not tms:
+            return np.zeros(0)
+        return np.concatenate([tm[k] for tm in tms])
+
+    tm = {k: cat(k) for k in ("sa", "vu", "hbm", "ici", "dur", "max4",
+                              "frac_on", "frac_w_on", "frac_off")}
+    gidx = _gap_indices(st)
+    pm = PowerModel(npu)
+    g = npu.gating
+    op = {
+        "seg_ids": st.seg_ids, "cnt": st.count, "dur": tm["dur"],
+        "durn": tm["dur"] * st.count,
+        "flops_sa": st.flops_sa, "has_mm": st.has_mm,
+        "frac_on": tm["frac_on"], "frac_w_on": tm["frac_w_on"],
+        "frac_off": tm["frac_off"], "max4": tm["max4"],
+        "sram_used": np.minimum(1.0, st.sram_demand / npu.sram_bytes),
+    }
+    for c in _BK_COMPS:
+        op[f"t_{c}"] = tm[c]
+        op[f"chunk_{c}"] = gidx[c][0]
+    scal = {"freq": npu.freq_hz, "sa_flops": npu.sa_flops,
+            "window_frac": g.detection_window_frac,
+            "leak_hbm_refresh": g.leak_hbm_refresh,
+            "leak_pe_weight_on": g.leak_pe_weight_on,
+            "vu_burst_cycles": float(g.vu_burst_cycles)}
+    for c, v in pm.static_w.items():
+        scal[f"static_w_{c}"] = v
+    for c, v in pm.dyn_max_w.items():
+        scal[f"dyn_w_{c}"] = v
+    for k, v in g.bet.items():
+        scal[f"bet_{k}"] = float(v)
+    for k, v in g.on_off_delay.items():
+        scal[f"delay_{k}"] = float(v)
+
+    def put(tree):
+        if isinstance(tree, dict):
+            return {k: put(v) for k, v in tree.items()}
+        return bk.asarray(tree)
+
+    data = put({"op": op, "gap_seg": {c: gidx[c][1] for c in _BK_COMPS},
+                "offsets": st.offsets, "scal": scal})
+    st._derived[key] = (npu, data)
+    return data
+
+
+def _knob_arrays(knob_grid, g, bk) -> dict:
+    ds = np.array([k.delay_scale for k in knob_grid], np.float64)
+    ds_unique, ds_inv = np.unique(ds, return_inverse=True)
+    return {
+        "dscale": bk.asarray(ds),
+        # masked-merge primitives are computed once per distinct delay
+        # scale; the inverse index maps them back onto the full grid
+        "dscale_unique": bk.asarray(ds_unique),
+        "dscale_inv": bk.asarray(ds_inv.astype(np.int64)),
+        "leak_logic": bk.asarray(np.array(
+            [k.leak_off_logic if k.leak_off_logic is not None
+             else g.leak_off_logic for k in knob_grid], np.float64)),
+        "leak_sleep": bk.asarray(np.array(
+            [k.leak_sram_sleep if k.leak_sram_sleep is not None
+             else g.leak_sram_sleep for k in knob_grid], np.float64)),
+        "leak_off": bk.asarray(np.array(
+            [k.leak_sram_off if k.leak_sram_off is not None
+             else g.leak_sram_off for k in knob_grid], np.float64)),
+    }
+
+
+def _evaluate_batch_backend(workloads, npu_specs, policies, knob_grid,
+                            bk, mesh=None) -> BatchResult:
+    """``evaluate_batch`` through the backend-neutral kernel.
+
+    On the jax backend the whole per-NPU evaluation is one jitted
+    program; per-op inputs can optionally be sharded over the stacked
+    workload axis of a ``parallel.jax_compat`` mesh.
+    """
+    st = stack_traces(workloads)
+    policies = tuple(policies)
+    w, a_n, p_n, k_n = st.n_segments, len(npu_specs), len(policies), \
+        len(knob_grid)
+    shape = (w, a_n, p_n, k_n)
+    runtime = np.zeros(shape)
+    static_j = {c: np.zeros(shape) for c in COMPONENTS}
+    dynamic_j = {c: np.zeros(shape) for c in COMPONENTS}
+    wake_events = {c: np.zeros(shape) for c in COMPONENTS}
+    gated_s = {c: np.zeros(shape) for c in COMPONENTS}
+    setpm_by = {c: np.zeros(shape) for c in COMPONENTS}
+    result = BatchResult(
+        workloads=tuple(st.names), npus=tuple(npu_specs),
+        policies=policies, knob_grid=tuple(knob_grid),
+        runtime_s=runtime, static_j=static_j, dynamic_j=dynamic_j,
+        wake_events=wake_events, gated_s=gated_s, setpm_by=setpm_by)
+    if w == 0:
+        return result
+    kern = _backend_kernel(bk)
+    with bk.compute_scope():
+        for ai, npu in enumerate(npu_specs):
+            data = _backend_data(st, npu, bk)
+            if mesh is not None:
+                data = bk.shard_data(data, mesh)
+            knobs = _knob_arrays(knob_grid, npu.gating, bk)
+            vm, ctx = bk.block(kern(data, knobs, policies))
+            cells = {cid: {q: bk.to_numpy(arr).T  # (K, W) -> (W, K)
+                           for q, arr in d.items()}
+                     for cid, d in vm["cells"].items()}
+            sram_static = {s: bk.to_numpy(arr).T
+                           for s, arr in vm["sram"].items()}
+            d_seg = bk.to_numpy(ctx["D_seg"])
+            dyn = {c: bk.to_numpy(ctx["dyn"][c]) for c in _BK_COMPS}
+            sram_gu = bk.to_numpy(ctx["sram_GU"])
+            sram_setpm = bk.to_numpy(ctx["sram_setpm"])
+            sram_dyn = bk.to_numpy(ctx["sram_dyn"])
+            pm = PowerModel(npu)
+            for pi, policy in enumerate(policies):
+                cp = _component_policies(policy)
+                ov_total = np.zeros((w, k_n))
+                for c in _BK_COMPS:
+                    cl = cells[_cell_id(c, cp[c])]
+                    static_j[c][:, ai, pi, :] = cl["static"]
+                    wake_events[c][:, ai, pi, :] = cl["wakes"]
+                    setpm_by[c][:, ai, pi, :] = cl["setpm"]
+                    gated_s[c][:, ai, pi, :] = cl["gated"]
+                    dynamic_j[c][:, ai, pi, :] = dyn[c][:, None]
+                    ov_total += cl["overhead"]
+                pol = cp["sram"]
+                static_j["sram"][:, ai, pi, :] = \
+                    sram_static[pol.sram_state]
+                if pol.sram_state != "on":
+                    gated_s["sram"][:, ai, pi, :] = sram_gu[:, None]
+                if pol.sram_state in ("sleep", "off") and pol.mode == "sw":
+                    setpm_by["sram"][:, ai, pi, :] = sram_setpm[:, None]
+                dynamic_j["sram"][:, ai, pi, :] = sram_dyn[:, None]
+                static_j["other"][:, ai, pi, :] = \
+                    (pm.static_w["other"] * d_seg)[:, None]
+                dynamic_j["other"][:, ai, pi, :] = \
+                    (pm.dyn_max_w["other"] * 0.3 * d_seg)[:, None]
+                runtime[:, ai, pi, :] = d_seg[:, None] + ov_total
+    return result
+
+
 def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
-                   knob_grid=None) -> BatchResult:
+                   knob_grid=None, *, backend: Optional[str] = None,
+                   jax_mesh=None) -> BatchResult:
     """Batched ``evaluate`` over the full design-space cross product.
 
     The workloads are stacked into one ragged super-trace; per-(trace,
@@ -1066,6 +1555,14 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     share the SA cell, ReGate-Base and ReGate-HW share VU/HBM/ICI/SRAM,
     …); the knob axis rides along as a trailing array dimension.
     Cell-for-cell equivalent to looping ``evaluate`` to ≤1e-9 relative.
+
+    ``backend`` selects the array substrate: ``"numpy"`` (default — the
+    eager production oracle) or ``"jax"`` (one jitted program per stack
+    shape, float64, reused across NPU generations; ≤1e-9 equivalent to
+    the numpy path record-for-record). ``None`` resolves to the session
+    default (``repro.core.backend.set_default_backend``). ``jax_mesh``
+    optionally shards the stacked per-op arrays over the ``"wl"`` axis
+    of a ``parallel.jax_compat`` mesh (jax backend only).
     """
     if isinstance(workloads, Workload):
         workloads = [workloads]
@@ -1073,6 +1570,13 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     npu_specs = tuple(get_npu(n) if isinstance(n, str) else n for n in npus)
     policies = tuple(policies)
     knob_grid = (PolicyKnobs(),) if knob_grid is None else tuple(knob_grid)
+    backend = backend_mod.default_backend() if backend is None else backend
+    if backend != "numpy" or jax_mesh is not None:
+        if jax_mesh is not None and backend == "numpy":
+            raise ValueError("jax_mesh requires backend='jax'")
+        return _evaluate_batch_backend(workloads, npu_specs, policies,
+                                       knob_grid, get_backend(backend),
+                                       mesh=jax_mesh)
     st = stack_traces(workloads)
     W, A, P, K = len(workloads), len(npu_specs), len(policies), \
         len(knob_grid)

@@ -61,17 +61,19 @@ def _points(recs: list[dict], configs: list[tuple[int, int]],
 
 
 def _measure_batch(model: str, phase: str, npu: str,
-                   configs: list[tuple[int, int]]) -> list[SweepPoint]:
+                   configs: list[tuple[int, int]],
+                   backend: Optional[str] = None) -> list[SweepPoint]:
     """Evaluate all (n_chips, batch) candidates through one batched
     sweep() call (one stacked trace, one set of array passes)."""
     wls = _config_workloads(model, phase, configs)
-    recs = sweep(wls, npus=(npu,), policies=("NoPG",))
+    recs = sweep(wls, npus=(npu,), policies=("NoPG",), backend=backend)
     return _points(recs, configs, phase, npu)
 
 
 def _measure(model: str, phase: str, npu: str, n_chips: int,
-             batch: int) -> SweepPoint:
-    return _measure_batch(model, phase, npu, [(n_chips, batch)])[0]
+             batch: int, backend: Optional[str] = None) -> SweepPoint:
+    return _measure_batch(model, phase, npu, [(n_chips, batch)],
+                          backend)[0]
 
 
 def hbm_fits(model: str, npu: str, n_chips: int, batch: int,
@@ -92,14 +94,20 @@ def hbm_fits(model: str, npu: str, n_chips: int, batch: int,
 def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
               gens=("NPU-A", "NPU-B", "NPU-C", "NPU-D", "NPU-E"),
               batches=(1, 4, 8, 32, 128, 512),
-              chip_counts=(1, 2, 4, 8, 16, 32, 64)) -> dict:
-    """Returns {gen: best SweepPoint or None, "_slo": value}."""
+              chip_counts=(1, 2, 4, 8, 16, 32, 64),
+              backend: Optional[str] = None) -> dict:
+    """Returns {gen: best SweepPoint or None, "_slo": value}.
+
+    ``backend`` selects the sweep array substrate (``"numpy"`` /
+    ``"jax"``; ``None`` = session default) for the one batched
+    (config × generation) evaluation the search rides on.
+    """
     # reference: default batch, minimum NPU-D chips that fit
     ref_batch = {"train": 32, "prefill": 4, "decode": 8}[phase]
     ref = None
     for n in chip_counts:
         if hbm_fits(model, "NPU-D", n, ref_batch, phase):
-            ref = _measure(model, phase, "NPU-D", n, ref_batch)
+            ref = _measure(model, phase, "NPU-D", n, ref_batch, backend)
             break
     if ref is None:
         return {"_slo": None}
@@ -116,7 +124,7 @@ def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
     union = [(n, b) for n in chip_counts for b in batches
              if any((n, b) in fits[gen] for gen in gens)]
     wls = _config_workloads(model, phase, union)
-    recs = sweep(wls, npus=gens, policies=("NoPG",))
+    recs = sweep(wls, npus=gens, policies=("NoPG",), backend=backend)
     by_gen = group_by(recs, "npu")  # workload-major order within each gen
     for gen in gens:
         gen_recs = by_gen.get((get_npu(gen).name,), [])

@@ -13,17 +13,25 @@ handful of segmented array passes — no per-cell Python round-trips.
 loop as the oracle; ``benchmarks/perf_sweep.py`` gates the batched path
 ≥10× faster with record-for-record ≤1e-9 relative equivalence.
 
+``sweep_grid`` crosses the §6.5 sensitivity axes (wake-delay scale,
+gated leakage ratios, SRAM sleep/off leakage, SA width) into a single
+fine-grid ``evaluate_batch`` call; with ``backend="jax"`` the grid runs
+as one jitted float64 program reused across NPU generations
+(``benchmarks/perf_sweep_jax.py`` gates ≥3× over the numpy batched path
+on a ≥100k-cell grid, record-for-record ≤1e-9).
+
 Records are emitted in deterministic order: workload-major, then NPU,
 then policy, then knob index (both paths, byte-identical ordering).
 """
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Iterable, Optional, Sequence
 
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.opgen import Workload, compile_trace
-from repro.core.policies import (POLICIES, EnergyReport, PolicyKnobs,
-                                 evaluate, evaluate_batch)
+from repro.core.policies import (POLICIES, BatchResult, EnergyReport,
+                                 PolicyKnobs, evaluate, evaluate_batch)
 from repro.core.power import COMPONENTS
 
 
@@ -57,16 +65,97 @@ def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
 def sweep(workloads: Sequence[Workload] | Workload,
           npus: Iterable[NPUSpec | str] = ("NPU-D",),
           policies: Iterable[str] = POLICIES,
-          knob_grid: Optional[Sequence[PolicyKnobs]] = None) -> list[dict]:
+          knob_grid: Optional[Sequence[PolicyKnobs]] = None,
+          backend: Optional[str] = None) -> list[dict]:
     """Evaluate every (workload, npu, policy, knobs) cell in one batched
-    pass; flat records."""
+    pass; flat records. ``backend`` selects the array substrate
+    (``"numpy"`` / ``"jax"`` / ``None`` for the session default)."""
     if isinstance(workloads, Workload):
         workloads = [workloads]
     if knob_grid is None:
         knob_grid = [PolicyKnobs()]
     npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
     return evaluate_batch(workloads, npu_specs, tuple(policies),
-                          tuple(knob_grid)).records()
+                          tuple(knob_grid), backend=backend).records()
+
+
+def knob_product(delay_scale: Sequence[float] = (1.0,),
+                 leak_off_logic: Sequence[Optional[float]] = (None,),
+                 leak_sram_sleep: Sequence[Optional[float]] = (None,),
+                 leak_sram_off: Sequence[Optional[float]] = (None,)) \
+        -> list[PolicyKnobs]:
+    """Cross product of the four sensitivity knobs (paper §6.5) into a
+    flat knob grid, delay-major ordering (delay_scale outermost,
+    leak_sram_off innermost). ``None`` leaves a knob at the per-NPU
+    Table 3 default."""
+    return [PolicyKnobs(delay_scale=d, leak_off_logic=lo,
+                        leak_sram_sleep=ls, leak_sram_off=lf)
+            for d in delay_scale for lo in leak_off_logic
+            for ls in leak_sram_sleep for lf in leak_sram_off]
+
+
+# SA-width variant specs memoized by (base spec identity, width): the
+# per-(stack, NPU) derived caches (_batch_ctx, _backend_data) are keyed
+# by spec identity, so repeated sweep_grid calls must hand back the SAME
+# variant object or every call would re-derive and re-transfer its
+# arrays (and grow the stack's cache without bound). The value keeps a
+# strong ref to the base spec so its id cannot be reused.
+_SAW_VARIANTS: dict[tuple[int, int], tuple[NPUSpec, NPUSpec]] = {}
+
+
+def _saw_variant(base: NPUSpec, width: int) -> NPUSpec:
+    if width == base.sa_width:
+        return base
+    hit = _SAW_VARIANTS.get((id(base), width))
+    if hit is not None and hit[0] is base:
+        return hit[1]
+    var = replace(base, name=f"{base.name}/saw{width}", sa_width=width)
+    _SAW_VARIANTS[(id(base), width)] = (base, var)
+    return var
+
+
+def sweep_grid(workloads: Sequence[Workload] | Workload,
+               npus: Iterable[NPUSpec | str] = ("NPU-D",),
+               policies: Iterable[str] = POLICIES, *,
+               delay_scale: Sequence[float] = (1.0,),
+               leak_off_logic: Sequence[Optional[float]] = (None,),
+               leak_sram_sleep: Sequence[Optional[float]] = (None,),
+               leak_sram_off: Sequence[Optional[float]] = (None,),
+               sa_width: Optional[Sequence[int]] = None,
+               backend: Optional[str] = None, jax_mesh=None,
+               as_records: bool = True):
+    """Fine-grid design-space sweep: the §6.5 sensitivity axes crossed
+    into one ``evaluate_batch`` call (CompPow-style component × knob
+    exploration at 100k-cell scale).
+
+    The knob axes (``delay_scale × leak_off_logic × leak_sram_sleep ×
+    leak_sram_off``) become the knob grid via ``knob_product``;
+    ``sa_width`` optionally widens the NPU axis with per-generation SA
+    width variants — each listed width that differs from a generation's
+    native width adds a ``replace()``d spec named ``{npu}/saw{width}``
+    (native widths keep the registry spec; variants are memoized per
+    (base, width), so the identity-keyed derived-trace caches stay warm
+    across repeated calls).
+
+    On the jax backend the whole grid runs as one jitted program that
+    compiles once and is reused across every NPU generation (and across
+    repeated calls with the same stack/grid shape); ``jax_mesh``
+    optionally shards the stacked workload axis over the devices of a
+    ``parallel.jax_compat`` mesh. Returns flat records, or the
+    ``BatchResult`` cube when ``as_records=False``.
+    """
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    knob_grid = knob_product(delay_scale, leak_off_logic,
+                             leak_sram_sleep, leak_sram_off)
+    npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
+    if sa_width is not None:
+        npu_specs = [_saw_variant(n, w)
+                     for n in npu_specs for w in sa_width]
+    res: BatchResult = evaluate_batch(
+        workloads, npu_specs, tuple(policies), tuple(knob_grid),
+        backend=backend, jax_mesh=jax_mesh)
+    return res.records() if as_records else res
 
 
 def sweep_reference(workloads: Sequence[Workload] | Workload,

@@ -1,0 +1,43 @@
+"""Shared ≤1e-9 sweep-equivalence helpers.
+
+One home for the record/report comparison contract (which fields
+compare exactly, the ``knob_idx`` special case, the 1e-30 denominator
+floor) so the batched-plane and jax-backend test files cannot silently
+diverge. Importable thanks to the tests-dir ``sys.path`` entry in
+``conftest.py``.
+"""
+RTOL = 1e-9
+
+
+def rel(a: float, b: float) -> float:
+    return abs(a - b) / max(1e-30, abs(a), abs(b))
+
+
+def assert_records_match(ref: list, got: list, rtol: float = RTOL):
+    """Flat sweep record tables: same fields, same ordering metadata,
+    every numeric field within ``rtol`` relative."""
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        assert set(a) == set(b)
+        for k, va in a.items():
+            vb = b[k]
+            if isinstance(va, (str, type(None))) or k == "knob_idx":
+                assert va == vb, (k, va, vb)
+            else:
+                assert rel(va, vb) <= rtol, \
+                    (a["workload"], a["npu"], a["policy"],
+                     a["knob_idx"], k, va, vb)
+
+
+def assert_reports_match(got, want, ctx, rtol: float = RTOL):
+    """Two ``EnergyReport``s: totals and every per-component field
+    within ``rtol`` relative."""
+    from repro.core.power import COMPONENTS
+    assert rel(got.runtime_s, want.runtime_s) <= rtol, ctx
+    assert rel(got.total_j, want.total_j) <= rtol, ctx
+    assert rel(got.setpm_count, want.setpm_count) <= rtol, ctx
+    for c in COMPONENTS:
+        for f in ("static_j", "dynamic_j", "wake_events", "gated_s",
+                  "setpm_by"):
+            assert rel(getattr(got, f)[c], getattr(want, f)[c]) \
+                <= rtol, (ctx, f, c)

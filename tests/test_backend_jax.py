@@ -1,0 +1,284 @@
+"""JAX array backend vs the numpy batched plane (ISSUE 4).
+
+The jax backend must reproduce ``evaluate_batch`` (numpy) — and through
+it ``sweep_reference`` — record-for-record to ≤1e-9 relative on every
+numeric field: the full acceptance grid (suite × 5 NPUs × 5 policies ×
+4 knobs), randomized ragged stacks with empty and single-op workloads
+mixed in, knob grids of size 1, and the ``sweep_grid`` fine-knob cross
+product with SA-width variants. Also: the x64 requirement raises a
+clear error instead of silently degrading to f32, and sharding the
+stacked workload axis over a ``jax_compat`` mesh changes nothing.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.backend import gap_index, get_backend  # noqa: E402
+from repro.core.hw import NPUS, get_npu  # noqa: E402
+from repro.core.opgen import (Op, Workload, paper_suite,  # noqa: E402
+                              segmented_gaps)
+from repro.core.policies import (POLICIES, PolicyKnobs,  # noqa: E402
+                                 evaluate, evaluate_batch)
+from repro.core.sweep import (sweep, sweep_grid,  # noqa: E402
+                              sweep_reference)
+
+from _sweep_equiv import RTOL  # noqa: E402
+from _sweep_equiv import rel as _rel  # noqa: E402
+from _sweep_equiv import assert_records_match as _assert_records_match  # noqa: E402,E501
+from _sweep_equiv import assert_reports_match as _assert_reports_match  # noqa: E402,E501
+
+KNOB_GRID = [
+    PolicyKnobs(),
+    PolicyKnobs(delay_scale=2.0),
+    PolicyKnobs(delay_scale=0.5),
+    PolicyKnobs(leak_off_logic=0.2, leak_sram_sleep=0.4,
+                leak_sram_off=0.02),
+]
+
+
+def _require_x64():
+    bk = get_backend("jax")
+    if bk._x64_ctx is None and not bk.x64_enabled():
+        pytest.skip("this jax has no scoped x64 switch and "
+                    "jax_enable_x64 is off")
+    return bk
+
+
+# --------------------------------------------------------------------------
+# acceptance grid: suite × 5 NPUs × 5 policies × 4 knobs
+# --------------------------------------------------------------------------
+
+def test_full_grid_matches_numpy_batched():
+    """The ISSUE-4 acceptance grid, record-for-record ≤1e-9 with
+    byte-identical ordering against the numpy batched path."""
+    _require_x64()
+    suite = paper_suite()
+    npus = tuple(NPUS)
+    ref = sweep(suite, npus, POLICIES, KNOB_GRID, backend="numpy")
+    got = sweep(suite, npus, POLICIES, KNOB_GRID, backend="jax")
+    key = ("workload", "npu", "policy", "knob_idx")
+    assert [tuple(r[k] for k in key) for r in ref] \
+        == [tuple(r[k] for k in key) for r in got]
+    _assert_records_match(ref, got)
+
+
+def test_matches_sweep_reference_loop_oracle():
+    """Transitively through the numpy plane is not enough: hold the jax
+    backend directly to the original one-evaluate-per-cell loop."""
+    _require_x64()
+    wls = paper_suite()[:3]
+    grid = [PolicyKnobs(), PolicyKnobs(delay_scale=4.0)]
+    ref = sweep_reference(wls, ("NPU-B", "NPU-E"), POLICIES, grid)
+    got = sweep(wls, ("NPU-B", "NPU-E"), POLICIES, grid, backend="jax")
+    _assert_records_match(ref, got)
+
+
+# --------------------------------------------------------------------------
+# randomized ragged stacks (empty + single-op workloads mixed in)
+# --------------------------------------------------------------------------
+
+def _random_workload(rng: np.random.Generator, i: int,
+                     n_ops: int) -> Workload:
+    ops = []
+    for j in range(n_ops):
+        kind = rng.random()
+        flops_sa = float(rng.uniform(1e9, 5e12)) if kind < 0.45 else 0.0
+        mm = None
+        if flops_sa and rng.random() < 0.8:
+            mm = (int(rng.integers(1, 4096)), int(rng.integers(1, 512)),
+                  int(rng.integers(1, 4096)))
+        ops.append(Op(
+            f"op{j}", flops_sa=flops_sa,
+            flops_vu=float(rng.uniform(1e8, 5e11))
+            if rng.random() < 0.5 else 0.0,
+            bytes_hbm=float(rng.uniform(1e6, 1e10))
+            if rng.random() < 0.6 else 0.0,
+            bytes_ici=float(rng.uniform(1e6, 1e9))
+            if rng.random() < 0.15 else 0.0,
+            sram_demand=int(rng.integers(0, 256 << 20)),
+            matmul_dims=mm, count=int(rng.integers(1, 5))))
+    return Workload(f"rand-{i}", "prefill", tuple(ops))
+
+
+def test_randomized_ragged_stack_property():
+    """Random ragged stack with empty and single-op workloads mixed in:
+    the jax backend must match per-workload ``evaluate`` cell-for-cell
+    (and the empty segments must come back as exact zeros)."""
+    _require_x64()
+    rng = np.random.default_rng(11)
+    sizes = [0, 1, int(rng.integers(2, 30)), 0, 1,
+             int(rng.integers(2, 30)), int(rng.integers(2, 30)), 0]
+    wls = [_random_workload(rng, i, n) for i, n in enumerate(sizes)]
+    grid = (PolicyKnobs(), PolicyKnobs(delay_scale=3.0),
+            PolicyKnobs(leak_off_logic=0.0, delay_scale=0.25))
+    npus = ("NPU-A", "NPU-E")
+    res = evaluate_batch(wls, npus, POLICIES, grid, backend="jax")
+    for wi, wl in enumerate(wls):
+        for ai, npu in enumerate(npus):
+            for pi, policy in enumerate(POLICIES):
+                for ki, knobs in enumerate(grid):
+                    want = evaluate(wl, npu, policy, knobs)
+                    got = res.report(wi, ai, pi, ki)
+                    _assert_reports_match(got, want,
+                                          (wl.name, npu, policy, ki))
+                    if not wl.ops:
+                        assert got.runtime_s == 0.0
+                        assert got.total_j == 0.0
+    for rec in res.records():
+        for v in rec.values():
+            if isinstance(v, float):
+                assert np.isfinite(v)
+
+
+def test_knob_grid_of_size_one_and_single_workload():
+    _require_x64()
+    wl = paper_suite()[8]
+    ref = sweep(wl, ("NPU-C",), POLICIES,
+                [PolicyKnobs(delay_scale=2.0)], backend="numpy")
+    got = sweep(wl, ("NPU-C",), POLICIES,
+                [PolicyKnobs(delay_scale=2.0)], backend="jax")
+    assert len(got) == len(POLICIES)
+    _assert_records_match(ref, got)
+
+
+def test_no_workloads_empty_result():
+    _require_x64()
+    res = evaluate_batch([], ("NPU-D",), POLICIES, backend="jax")
+    assert res.shape == (0, 1, len(POLICIES), 1)
+    assert res.records() == []
+
+
+# --------------------------------------------------------------------------
+# sweep_grid fine-knob entry point
+# --------------------------------------------------------------------------
+
+def test_sweep_grid_cross_product_equivalence():
+    """A small §6.5 cross product: jax matches numpy record-for-record
+    and the knob metadata columns carry the delay-major ordering."""
+    _require_x64()
+    wls = paper_suite()[:2]
+    kw = dict(delay_scale=(0.5, 1.0, 2.0),
+              leak_off_logic=(0.03, 0.2),
+              leak_sram_sleep=(0.25,),
+              leak_sram_off=(0.002, 0.02))
+    ref = sweep_grid(wls, ("NPU-D",), POLICIES, backend="numpy", **kw)
+    got = sweep_grid(wls, ("NPU-D",), POLICIES, backend="jax", **kw)
+    assert len(got) == 2 * 1 * len(POLICIES) * 12
+    _assert_records_match(ref, got)
+    # delay-major ordering: leak_sram_off innermost
+    k0 = [r for r in got if r["workload"] == wls[0].name
+          and r["policy"] == POLICIES[0]]
+    assert [r["delay_scale"] for r in k0[:4]] == [0.5] * 4
+    assert [r["leak_sram_off"] for r in k0[:4]] == [0.002, 0.02] * 2
+
+
+def test_sweep_grid_sa_width_axis():
+    """SA-width variants widen the NPU axis: replaced specs get
+    ``/saw{width}`` names, native widths keep the registry spec, and a
+    non-native width genuinely changes the SA numbers."""
+    _require_x64()
+    wl = paper_suite()[4]  # prefill, SA-heavy
+    res = sweep_grid(wl, ("NPU-D",), ("NoPG", "ReGate-HW"),
+                     sa_width=(128, 256), backend="jax",
+                     as_records=False)
+    assert tuple(n.name for n in res.npus) == ("NPU-D", "NPU-D/saw256")
+    recs = res.records()
+    assert {r["npu"] for r in recs} == {"NPU-D", "NPU-D/saw256"}
+    native = [r for r in recs if r["npu"] == "NPU-D"
+              and r["policy"] == "ReGate-HW"][0]
+    wide = [r for r in recs if r["npu"] == "NPU-D/saw256"
+            and r["policy"] == "ReGate-HW"][0]
+    assert native["runtime_s"] != wide["runtime_s"]
+    # per-variant cells equal a direct evaluation on the replaced spec
+    from dataclasses import replace
+    spec = replace(get_npu("NPU-D"), name="NPU-D/saw256", sa_width=256)
+    want = evaluate(wl, spec, "ReGate-HW")
+    assert _rel(wide["total_j"], want.total_j) <= RTOL
+
+
+# --------------------------------------------------------------------------
+# sharding over the stacked workload axis (jax_compat mesh)
+# --------------------------------------------------------------------------
+
+def test_jax_mesh_sharded_matches_unsharded():
+    _require_x64()
+    from repro.parallel import jax_compat
+    mesh = jax_compat.make_mesh((len(jax.devices()),), ("wl",))
+    wls = paper_suite()[:3]
+    ref = sweep(wls, ("NPU-A", "NPU-D"), POLICIES, KNOB_GRID,
+                backend="numpy")
+    got = evaluate_batch(wls, ("NPU-A", "NPU-D"), POLICIES, KNOB_GRID,
+                         backend="jax", jax_mesh=mesh).records()
+    _assert_records_match(ref, got)
+
+
+def test_jax_mesh_requires_jax_backend():
+    with pytest.raises(ValueError, match="jax_mesh"):
+        evaluate_batch(paper_suite()[:1], backend="numpy",
+                       jax_mesh=object())
+
+
+# --------------------------------------------------------------------------
+# x64 discipline
+# --------------------------------------------------------------------------
+
+def test_x64_disabled_raises_clear_error(monkeypatch):
+    """Without a scoped x64 switch and with the global flag off, the
+    jax backend must refuse loudly (f32 would silently violate the
+    ≤1e-9 contract) and tell the user how to enable x64."""
+    bk = get_backend("jax")
+    monkeypatch.setattr(bk, "_x64_ctx", None)
+    if bk.x64_enabled():
+        pytest.skip("jax_enable_x64 is globally on in this session")
+    with pytest.raises(RuntimeError, match="x64"):
+        evaluate_batch(paper_suite()[:1], ("NPU-D",), ("NoPG",),
+                       backend="jax")
+
+
+def test_default_backend_steering(monkeypatch):
+    """``set_default_backend`` steers ``backend=None`` callers (what
+    ``benchmarks/run.py --backend jax`` relies on)."""
+    _require_x64()
+    from repro.core import backend as backend_mod
+    wl = paper_suite()[0]
+    ref = sweep(wl, policies=("NoPG",), backend="numpy")
+    prev = backend_mod.set_default_backend("jax")
+    try:
+        got = sweep(wl, policies=("NoPG",))
+    finally:
+        backend_mod.set_default_backend(prev)
+    _assert_records_match(ref, got)
+
+
+# --------------------------------------------------------------------------
+# fixed-shape gap index vs the ragged reduceat oracle
+# --------------------------------------------------------------------------
+
+def test_gap_index_matches_segmented_gaps():
+    """Per-segment masked gap sums computed through the fixed-shape
+    index must equal the ragged ``segmented_gaps`` chunking for random
+    activity patterns with empty segments mixed in."""
+    rng = np.random.default_rng(5)
+    for _ in range(20):
+        lens = rng.integers(0, 9, size=int(rng.integers(1, 7)))
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        n = int(offsets[-1])
+        active = rng.random(n) < 0.4
+        idle = np.where(active, 0.0, rng.random(n))
+        gv_ref, gofs = segmented_gaps(active, idle, offsets)
+        chunk_of_op, gap_seg = gap_index(active, offsets)
+        n_gaps = len(gap_seg)
+        gv = np.bincount(chunk_of_op, weights=idle,
+                         minlength=n_gaps)[:n_gaps]
+        w = len(lens)
+        for thresh in (0.0, 0.3, 1.5):
+            mask_ref = gv_ref > thresh
+            ref = np.array([np.where(mask_ref[gofs[s]:gofs[s + 1]],
+                                     gv_ref[gofs[s]:gofs[s + 1]],
+                                     0.0).sum() for s in range(w)])
+            mask = gv > thresh
+            got = np.bincount(gap_seg[mask], weights=gv[mask],
+                              minlength=w)[:w]
+            np.testing.assert_allclose(got, ref, rtol=1e-12, atol=0)

@@ -21,7 +21,9 @@ from repro.core.policies import (POLICIES, PolicyKnobs, evaluate,
 from repro.core.power import COMPONENTS
 from repro.core.sweep import sweep, sweep_reference, with_savings
 
-RTOL = 1e-9
+from _sweep_equiv import RTOL
+from _sweep_equiv import rel as _rel
+from _sweep_equiv import assert_records_match as _assert_records_match
 
 KNOB_GRID = [
     PolicyKnobs(),
@@ -30,24 +32,6 @@ KNOB_GRID = [
     PolicyKnobs(leak_off_logic=0.2, leak_sram_sleep=0.4,
                 leak_sram_off=0.02),
 ]
-
-
-def _rel(a: float, b: float) -> float:
-    return abs(a - b) / max(1e-30, abs(a), abs(b))
-
-
-def _assert_records_match(ref: list[dict], bat: list[dict]):
-    assert len(ref) == len(bat)
-    for a, b in zip(ref, bat):
-        assert set(a) == set(b)
-        for k, va in a.items():
-            vb = b[k]
-            if isinstance(va, (str, type(None))) or k == "knob_idx":
-                assert va == vb, (k, va, vb)
-            else:
-                assert _rel(va, vb) <= RTOL, \
-                    (a["workload"], a["npu"], a["policy"], a["knob_idx"],
-                     k, va, vb)
 
 
 def test_records_match_reference_full_grid():
@@ -142,6 +126,70 @@ def test_ragged_stacking_no_gap_leakage():
                                     want.setpm_by[c]) <= RTOL, (ctx, c)
 
 
+def test_empty_trace_in_ragged_stack():
+    """Regression (ISSUE 4): zero-op workloads mixed into a randomized
+    ragged stack — leading, trailing, and consecutive empty segments —
+    must yield exactly-zero records without NaNs and without shifting
+    any neighbour's segment alignment (per-workload ``evaluate`` is the
+    oracle)."""
+    rng = np.random.default_rng(17)
+    empty = Workload("empty", "prefill", ())
+    wls = [empty, _random_workload(rng, 1), empty,
+           Workload("also-empty", "prefill", ()),
+           _random_workload(rng, 4), _random_workload(rng, 5), empty]
+    grid = [PolicyKnobs(), PolicyKnobs(delay_scale=3.0)]
+    res = evaluate_batch(wls, ("NPU-A", "NPU-E"), POLICIES, grid)
+    for wi, wl in enumerate(wls):
+        for ai, npu in enumerate(("NPU-A", "NPU-E")):
+            for pi, policy in enumerate(POLICIES):
+                for ki, knobs in enumerate(grid):
+                    want = evaluate(wl, npu, policy, knobs)
+                    got = res.report(wi, ai, pi, ki)
+                    ctx = (wl.name, npu, policy, ki)
+                    assert _rel(got.runtime_s, want.runtime_s) <= RTOL, ctx
+                    assert _rel(got.total_j, want.total_j) <= RTOL, ctx
+                    if not wl.ops:
+                        assert got.runtime_s == 0.0 and got.total_j == 0.0
+                        assert got.setpm_count == 0.0
+    for rec in res.records():
+        for v in rec.values():
+            if isinstance(v, float):
+                assert math.isfinite(v)
+
+
+def test_stack_traces_with_empty_and_no_workloads():
+    """Stack bookkeeping around empty traces: offsets must carry the
+    zero-length spans, and an all-empty or zero-workload stack must
+    produce empty (not misaligned) columns."""
+    empty = Workload("e", "prefill", ())
+    wls = [empty, paper_suite()[0], empty]
+    st = stack_traces(wls)
+    n1 = compile_trace(paper_suite()[0]).n_ops
+    assert st.offsets.tolist() == [0, 0, n1, n1]
+    assert st.n_ops == n1
+    assert (st.seg_ids == 1).all()
+    st0 = stack_traces([])
+    assert st0.n_segments == 0 and st0.n_ops == 0
+    assert st0.offsets.tolist() == [0]
+    res = evaluate_batch([], ("NPU-D",), POLICIES)
+    assert res.shape == (0, 1, len(POLICIES), 1)
+    assert res.records() == []
+
+
+def test_segmented_gaps_empty_segments_alignment():
+    """Empty segments must own zero gaps; idle runs butting against an
+    empty segment stay in their own workload."""
+    # seg0: 2 ops (idle, active); seg1: empty; seg2: 2 ops (idle, idle)
+    active = np.array([False, True, False, False])
+    idle = np.where(active, 0.0, 1.0)
+    offsets = np.array([0, 2, 2, 4])
+    gaps, gofs = segmented_gaps(active, idle, offsets)
+    # seg0: the gap before op1 (1.0); seg1: no gaps at all; seg2: one
+    # merged gap of 2.0 that must NOT bleed into seg0 or seg1
+    assert gofs.tolist() == [0, 1, 1, 2]
+    assert gaps.tolist() == [1.0, 2.0]
+
+
 def test_stacking_order_independence():
     """A workload's cell must not depend on its neighbours in the stack
     (pure segment isolation)."""
@@ -203,8 +251,27 @@ def test_segmented_gaps_respect_boundaries():
 
 
 # --------------------------------------------------------------------------
-# evaluate_all wrapper + with_savings edge cases
+# backend-neutral kernel: the numpy instantiation must also match
 # --------------------------------------------------------------------------
+
+def test_backend_neutral_kernel_numpy_instantiation():
+    """The ISSUE-4 kernel is backend-neutral; instantiated with the
+    numpy backend (loop vmap, bincount segment_sum — the path the jax
+    program mirrors) it must reproduce the production numpy plane.
+    This keeps NumpyBackend an exercised oracle, not dead code."""
+    from repro.core.backend import get_backend
+    from repro.core.policies import _evaluate_batch_backend
+    rng = np.random.default_rng(29)
+    wls = [_random_workload(rng, 0), Workload("empty", "prefill", ()),
+           _random_workload(rng, 2)]
+    grid = (PolicyKnobs(), PolicyKnobs(delay_scale=2.0),
+            PolicyKnobs(leak_off_logic=0.2, leak_sram_sleep=0.4,
+                        leak_sram_off=0.02))
+    npus = (get_npu("NPU-B"), get_npu("NPU-E"))
+    ref = evaluate_batch(wls, npus, POLICIES, grid)
+    got = _evaluate_batch_backend(wls, npus, POLICIES, grid,
+                                  get_backend("numpy"))
+    _assert_records_match(ref.records(), got.records())
 
 def test_evaluate_all_matches_evaluate():
     wl = paper_suite()[8]
