@@ -30,6 +30,7 @@ DEFAULT_PAIRS = [
     "BENCH_timeline_executor.json:BENCH_timeline_executor.new.json",
     "BENCH_sweep.json:BENCH_sweep.new.json",
     "BENCH_sweep_jax.json:BENCH_sweep_jax.new.json",
+    "BENCH_sweep_multidevice.json:BENCH_sweep_multidevice.new.json",
 ]
 
 

@@ -38,7 +38,8 @@ def fine_grid_study():
         delay_scale=(0.25, 0.5, 1.0, 2.0, 4.0, 8.0),
         leak_off_logic=(0.01, 0.03, 0.1, 0.2, 0.4),
         leak_sram_sleep=(0.1, 0.25, 0.4, 0.6),
-        leak_sram_off=(0.002, 0.02))
+        leak_sram_off=(0.002, 0.02),
+        sa_width=(None, 256))  # §6.5 SA-width axis — a real knob now
     recs = with_savings(recs)
     print(f"\nfine-grid cube: {len(recs)} cells in "
           f"{time.perf_counter() - t0:.2f}s")

@@ -20,7 +20,15 @@ The contract each backend provides:
 * ``jit(fn, static_argnames)`` / ``vmap_knobs(fn, knobs)`` — compile and
   knob-axis-map hooks (identity / Python loop on numpy);
 * ``asarray`` / ``to_numpy`` / ``compute_scope()`` — transfer in/out and
-  the dtype discipline scope (jax: float64 via x64).
+  the dtype discipline scope (jax: float64 via x64);
+* ``sa_occupancy(...)`` — the in-program SA PE-occupancy pass
+  (ISSUE 5): the backend-neutral closed form, or on jax optionally the
+  Pallas ``kernels/sa_occupancy.py`` tile kernel
+  (``set_sa_occupancy_impl``) — either way traced, so SA width rides
+  the knob axis;
+* ``psum`` / ``all_gather`` / ``pspec`` / ``shard_map_kernel`` — the
+  collective surface the multi-device ``shard_map`` sweep program is
+  built from (jax only; resolved through ``parallel.jax_compat``).
 
 Ragged gap merging (``opgen.segmented_gaps``) is data-dependent-shape
 and cannot run under ``jit``; ``gap_index`` builds the equivalent
@@ -65,6 +73,14 @@ class NumpyBackend:
 
     name = "numpy"
     xp = np
+    sa_occupancy_impl = "xp"
+
+    @staticmethod
+    def sa_occupancy(mm_m, mm_k, mm_n, saw, weight_load_cycles=None):
+        """Per-op SA PE-occupancy stats (closed form, ``sa_gating``)."""
+        from repro.core.sa_gating import gating_stats_batch_xp
+        return gating_stats_batch_xp(mm_m, mm_k, mm_n, saw,
+                                     weight_load_cycles, xp=np)
 
     @staticmethod
     def asarray(x):
@@ -122,6 +138,12 @@ class JaxBackend:
                 "backend='numpy' or install jax") from e
         self._jax = jax
         self.xp = jnp
+        # SA occupancy pass inside the jitted sweep kernel: "jnp" (the
+        # pure-jnp closed form, the oracle) or "pallas" (the
+        # kernels/sa_occupancy.py tile kernel, interpret=True on CPU).
+        # Switch via ``set_sa_occupancy_impl``; the sweep kernel cache
+        # keys on it so flipping recompiles cleanly.
+        self.sa_occupancy_impl = "jnp"
         try:
             from jax.experimental import enable_x64
             self._x64_ctx: Optional[Callable] = enable_x64
@@ -169,6 +191,19 @@ class JaxBackend:
         """Wait for async dispatch so wall-clock timings are honest."""
         return self._jax.block_until_ready(tree)
 
+    def sa_occupancy(self, mm_m, mm_k, mm_n, saw, weight_load_cycles=None):
+        """Per-op SA PE-occupancy stats, computed *inside* the traced
+        sweep program (``saw`` may be a traced scalar — the SA-width
+        knob axis). Routes to the pure-jnp closed form or the Pallas
+        tile kernel per ``sa_occupancy_impl``."""
+        if self.sa_occupancy_impl == "pallas":
+            from repro.kernels.sa_occupancy import sa_occupancy_p
+            return sa_occupancy_p(mm_m, mm_k, mm_n, saw,
+                                  weight_load_cycles)
+        from repro.core.sa_gating import gating_stats_batch_xp
+        return gating_stats_batch_xp(mm_m, mm_k, mm_n, saw,
+                                     weight_load_cycles, xp=self.xp)
+
     # -- optional multi-device sharding --------------------------------
     def op_axis_sharding(self, mesh):
         """NamedSharding pair (shard-over-ops, replicated) for placing
@@ -193,6 +228,38 @@ class JaxBackend:
 
         return {k: put(v, shard if k == "op" else repl)
                 for k, v in data.items()}
+
+    # -- shard_map execution path (ISSUE 5) ----------------------------
+    @staticmethod
+    def mesh_axis_sizes(mesh) -> dict[str, int]:
+        from repro.parallel import jax_compat
+        return jax_compat.mesh_axis_sizes(mesh)
+
+    @staticmethod
+    def pspec(*names):
+        """``PartitionSpec`` constructor exposed through the contract so
+        the policy engine never imports jax directly."""
+        from jax.sharding import PartitionSpec
+        return PartitionSpec(*names)
+
+    def psum(self, tree, axis_name: str):
+        """Cross-device sum over a mesh axis (inside ``shard_map``)."""
+        return self._jax.lax.psum(tree, axis_name)
+
+    def all_gather(self, tree, axis_name: str):
+        """Gather shards along leading axis (inside ``shard_map``)."""
+        return self._jax.lax.all_gather(tree, axis_name, axis=0,
+                                        tiled=True)
+
+    def shard_map_kernel(self, body: Callable, mesh, in_specs,
+                         out_specs) -> Callable:
+        """Compile ``body`` as one SPMD program over ``mesh`` via the
+        version-spanning ``jax_compat.shard_map`` (replication checks
+        off: the kernel's psums make every unmentioned-axis output
+        genuinely replicated)."""
+        from repro.parallel import jax_compat
+        return self._jax.jit(jax_compat.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
 
 
 _BACKENDS: dict[str, object] = {}
@@ -238,6 +305,24 @@ def set_default_backend(name: str) -> str:
 
 def default_backend() -> str:
     return _DEFAULT_BACKEND
+
+
+SA_OCCUPANCY_IMPLS = ("jnp", "pallas")
+
+
+def set_sa_occupancy_impl(name: str) -> str:
+    """Select the jax backend's in-program SA occupancy pass: ``"jnp"``
+    (pure-jnp closed form, the default and oracle) or ``"pallas"`` (the
+    ``kernels/sa_occupancy.py`` tile kernel, interpret-mode on CPU).
+    Returns the previous selection. The sweep-kernel cache keys on this,
+    so flipping it mid-session recompiles instead of reusing a stale
+    program."""
+    if name not in SA_OCCUPANCY_IMPLS:
+        raise KeyError(f"unknown sa_occupancy impl {name!r}; "
+                       f"have {SA_OCCUPANCY_IMPLS}")
+    bk = get_backend("jax")
+    prev, bk.sa_occupancy_impl = bk.sa_occupancy_impl, name
+    return prev
 
 
 # --------------------------------------------------------------------------

@@ -123,6 +123,36 @@ def get_npu(name: str) -> NPUSpec:
     raise KeyError(f"unknown NPU {name!r}; have {sorted(NPUS)}")
 
 
+# SA-width variants memoized by (base spec identity, width): the policy
+# engine's derived-trace caches (``trace_times``, ``_batch_ctx``,
+# ``_backend_data``) are keyed by spec identity, so the knob axis must
+# hand back the SAME variant object on every call or each sweep would
+# re-derive and re-transfer its arrays. The value keeps a strong ref to
+# the base spec so its id cannot be reused. The variant keeps the base
+# *name* — every name-keyed table (power shares, figures) applies
+# unchanged, and sweep records carry the width in their own
+# ``sa_width`` knob column instead of a mangled spec name.
+_SAW_VARIANTS: dict[tuple[int, int], tuple["NPUSpec", "NPUSpec"]] = {}
+
+
+def with_sa_width(spec: "NPUSpec", width: "int | None") -> "NPUSpec":
+    """``spec`` with its systolic-array width replaced (memoized).
+
+    ``None`` or the native width returns ``spec`` itself. Note
+    ``sa_flops`` is *derived* (saw² · 2 · n_sa · freq), so widening the
+    array also raises peak matmul throughput, exactly like a real
+    generation variant would."""
+    if width is None or width == spec.sa_width:
+        return spec
+    hit = _SAW_VARIANTS.get((id(spec), width))
+    if hit is not None and hit[0] is spec:
+        return hit[1]
+    from dataclasses import replace
+    var = replace(spec, sa_width=int(width))
+    _SAW_VARIANTS[(id(spec), width)] = (spec, var)
+    return var
+
+
 # --------------------------------------------------------------------------
 # Execution-plane roofline target (the chip the dry-run "runs" on).
 # Constants fixed by the assignment: 197 TFLOP/s bf16, 819 GB/s HBM,

@@ -46,10 +46,15 @@ A third layer batches whole design-space sweeps:
   ``jax.jit``-compiled float64 program (``repro.core.backend``): gap
   chunking moves to a host-built fixed-shape index, per-NPU numbers
   enter as traced arrays so one compiled program serves every
-  generation, and the knob axis is vmapped over the unique delay
-  scales with the leakage knobs folded in linearly afterwards —
-  record-for-record ≤1e-9 against the numpy path, which stays the
-  oracle.
+  generation, and — since ISSUE 5 — the per-op service times and SA
+  PE-occupancy math are *traced* too (``bk.sa_occupancy``; SA width is
+  a real ``PolicyKnobs.sa_width`` knob axis). Heavy O(n_ops) work is
+  vmapped over the unique SA widths and the unique (width, delay)
+  pairs with the leakage knobs folded in linearly afterwards. A
+  ``jax_mesh`` scales the program out across devices — GSPMD op-axis
+  sharding on a ``("wl",)`` mesh, or an explicit ``shard_map`` SPMD
+  program when the mesh has a ``"knob"`` axis — record-for-record
+  ≤1e-9 against the numpy path, which stays the oracle.
 """
 from __future__ import annotations
 
@@ -61,7 +66,7 @@ import numpy as np
 
 from repro.core import backend as backend_mod
 from repro.core.backend import gap_index, get_backend
-from repro.core.hw import NPUSpec, get_npu
+from repro.core.hw import NPUSpec, get_npu, with_sa_width
 from repro.core.opgen import (Op, StackedTrace, TraceArrays, Workload,
                               compile_trace, segment_sum, segmented_gaps,
                               stack_traces)
@@ -75,11 +80,22 @@ GATEABLE = ("sa", "vu", "sram", "hbm", "ici")
 
 @dataclass(frozen=True)
 class PolicyKnobs:
-    """Sensitivity-analysis overrides (paper §6.5)."""
+    """Sensitivity-analysis overrides (paper §6.5).
+
+    ``sa_width`` overrides the NPU's systolic-array width (``None`` →
+    native). It is a real knob axis: the scalar engines evaluate on a
+    memoized ``hw.with_sa_width`` variant spec, the numpy batched plane
+    groups the knob grid by effective width, and the jax sweep kernel
+    carries the width as a *traced* scalar so one compiled program
+    serves the whole width axis. Note SA peak FLOP/s is derived from
+    the width, so this axis moves throughput and occupancy together —
+    the paper's §6.5 width sensitivity, without per-width NPU variants.
+    """
     leak_off_logic: Optional[float] = None
     leak_sram_sleep: Optional[float] = None
     leak_sram_off: Optional[float] = None
     delay_scale: float = 1.0  # scales wake-up delays and BETs
+    sa_width: Optional[int] = None
 
 
 @dataclass
@@ -226,6 +242,7 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
                        policy: str = "ReGate-Full",
                        knobs: PolicyKnobs = PolicyKnobs()) -> EnergyReport:
     npu = get_npu(npu) if isinstance(npu, str) else npu
+    npu = with_sa_width(npu, knobs.sa_width)
     pm = PowerModel(npu)
     g = npu.gating
     cp = _component_policies(policy)
@@ -533,6 +550,7 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
              knobs: PolicyKnobs = PolicyKnobs()) -> EnergyReport:
     """Columnar engine; semantics identical to ``evaluate_reference``."""
     npu = get_npu(npu) if isinstance(npu, str) else npu
+    npu = with_sa_width(npu, knobs.sa_width)
     tr = compile_trace(wl)
     tm = trace_times(tr, npu)
     pm = PowerModel(npu)
@@ -789,19 +807,20 @@ class BatchResult:
                                      col(self.dynamic_j[c]))
                                     for c in COMPONENTS]
         knobs_meta = [(ki, kn.delay_scale, kn.leak_off_logic,
-                       kn.leak_sram_sleep, kn.leak_sram_off)
+                       kn.leak_sram_sleep, kn.leak_sram_off, kn.sa_width)
                       for ki, kn in enumerate(self.knob_grid)]
         recs = []
         i = 0
         for wname in self.workloads:
             for npu in self.npus:
                 for policy in self.policies:
-                    for ki, dsc, lol, lss, lso in knobs_meta:
+                    for ki, dsc, lol, lss, lso, saw in knobs_meta:
                         rec = {
                             "workload": wname, "npu": npu.name,
                             "policy": policy, "knob_idx": ki,
                             "delay_scale": dsc, "leak_off_logic": lol,
                             "leak_sram_sleep": lss, "leak_sram_off": lso,
+                            "sa_width": saw,
                             "runtime_s": cols[0][i], "total_j": cols[1][i],
                             "static_total_j": cols[2][i],
                             "dynamic_total_j": cols[3][i],
@@ -1091,113 +1110,164 @@ def _sram_states(policies) -> tuple[str, ...]:
         _component_policies(p)["sram"].sram_state for p in policies))
 
 
-def _sweep_kernel(data, knobs, policies, bk):
-    """The whole ``_batch_ctx`` → ``_comp_cell`` assembly as one pure,
-    backend-neutral program over fixed-shape arrays.
+def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
+    """The whole sweep — service times, SA occupancy, gap merges, and
+    the policy/knob assembly — as one pure, backend-neutral program
+    over fixed-shape arrays.
 
-    ``data`` carries per-op columns, the host-built fixed-shape gap
-    index (``backend.gap_index`` — chunk ownership replaces the
-    data-dependent ``reduceat`` of ``segmented_gaps``), and per-NPU
-    scalars as 0-d arrays so one compiled program serves every NPU
-    generation. Distinct ``_CompPolicy`` cells are computed once and
-    shared across policies (same memoization as the numpy path, applied
-    at trace time).
+    ``data`` carries the *raw* per-op columns (FLOPs, bytes, matmul
+    dims), the host-built fixed-shape gap index (``backend.gap_index``
+    — chunk ownership replaces the data-dependent ``reduceat`` of
+    ``segmented_gaps``), and per-NPU scalars as 0-d arrays so one
+    compiled program serves every NPU generation. Unlike the PR-4
+    kernel, the per-op service times and the SA PE-occupancy closed
+    form (``bk.sa_occupancy``) are computed *inside* the traced
+    program: the SA width ``saw`` enters as a traced scalar, which is
+    what turns ``sa_width`` into a real knob axis (ISSUE 5). Distinct
+    ``_CompPolicy`` cells are computed once and shared across policies
+    (same memoization as the numpy path, applied at trace time).
 
-    The knob axis is factored: every gating threshold scales with
-    ``delay_scale`` only, and every leakage knob enters *linearly after*
-    the segmented reductions, so the O(n_ops)-sized masked merges run
-    through ``bk.vmap_knobs`` over the **unique** delay scales
-    (``knobs["dscale_unique"]``) and the full knob grid is assembled
-    from those primitives with O(W × K) linear algebra. A crossed
-    delay × leakage grid therefore costs ``len(unique delays)`` heavy
-    passes, not ``K``; a grid of all-distinct delays degrades to the
-    per-knob cost.
+    The knob axis is factored: the O(n_ops)-sized work — occupancy,
+    service times, gap merges, masked threshold merges — depends only
+    on ``(sa_width, delay_scale)``, and every leakage knob enters
+    *linearly after* the segmented reductions. So the heavy passes run
+    through ``bk.vmap_knobs`` over the **unique** (saw, delay-scale)
+    pairs (``knobs["pair_saw"]/["pair_dscale"]``) and the full knob
+    grid is assembled from those primitives with O(W × K) linear
+    algebra. A crossed width × delay × leakage grid therefore costs
+    ``len(unique pairs)`` heavy passes, not ``K``.
 
-    Returns ``(out, ctx)``: knob-dependent per-cell quantities as
-    (K, W) arrays, plus the knob-independent per-segment sums.
+    Under ``shard_map`` (the multi-device path) the op axis may be
+    sharded over the ``wl_axis`` mesh axis — every op-axis segment sum
+    is then completed with a ``psum`` — and the pair + knob axes over
+    ``knob_axis``: each device runs the heavy passes for its local
+    pairs, ``all_gather``s the (small) per-segment primitives, and
+    assembles only its local knob slice.
+
+    Returns a dict of (K, W) arrays: per-cell quantities (``cells``),
+    SRAM static per state (``sram``), and the per-knob context
+    (``D_seg``, ``dyn``, ``sram_GU``, ``sram_dyn``) the host assembly
+    broadcasts from.
     """
     xp = bk.xp
     op = data["op"]
     offsets = data["offsets"]
     scal = data["scal"]
     w = offsets.shape[0] - 1
-    n = op["seg_ids"].shape[0]
     seg = op["seg_ids"]
+    cnt = op["cnt"]
+
+    def opsum(v, ids, num):
+        """Segment sum over the (possibly device-sharded) op axis."""
+        s = bk.segment_sum(v, ids, num)
+        return bk.psum(s, wl_axis) if wl_axis else s
 
     def segsum(v):
-        return bk.segment_sum(v, seg, w)
-
-    cnt, dur, durn = op["cnt"], op["dur"], op["durn"]
-    d_seg = segsum(durn)
-    comp: dict[str, dict] = {}
-    for c in _BK_COMPS:
-        a = op[f"t_{c}"]
-        active = a > 0
-        gseg = data["gap_seg"][c]
-        gap_vals = bk.segment_sum(xp.where(active, 0.0, durn),
-                                  op[f"chunk_{c}"], gseg.shape[0])
-        slack = xp.where(active, dur - a, 0.0)
-        comp[c] = {
-            "gap_vals": gap_vals, "gap_seg": gseg,
-            "S_gap": bk.segment_sum(gap_vals, gseg, w),
-            "slack": slack, "scnt": slack * cnt,
-            "S_slk": segsum(slack * cnt),
-            "acnt": a * cnt, "AN": segsum(a * cnt),
-        }
-    dyn = {c: scal[f"dyn_w_{c}"] * comp[c]["AN"]
-           for c in ("vu", "hbm", "ici")}
-    dyn["sa"] = scal["dyn_w_sa"] * segsum(
-        op["flops_sa"] / scal["sa_flops"] * cnt)
-    occ_ideal = xp.where(op["has_mm"], op["frac_on"], 1.0)
-    comp["sa"]["occ_ideal_AN"] = segsum(occ_ideal * comp["sa"]["acnt"])
-    # VU fine-grained burst structure (knob-independent parts)
-    vu = comp["vu"]
-    t_vu = op["t_vu"]
-    sel = (t_vu > 0) & (vu["slack"] > 0)
-    active_cy = xp.maximum(1.0, scal["freq"] * t_vu)
-    n_bursts = xp.maximum(1.0, active_cy / scal["vu_burst_cycles"])
-    gap_raw = scal["freq"] * vu["slack"] / n_bursts
-    psn = scal["static_w_vu"] * vu["slack"] * cnt
-    vu.update(sel=sel, nbn=n_bursts * cnt,
-              gap_cy=xp.where(sel, gap_raw, 0.0),
-              inv_gap=xp.where(sel, 1.0 / xp.where(sel, gap_raw, 1.0), 0.0),
-              psn=psn, PSN_seg=segsum(psn))
-    # SRAM capacity model (knob- and policy-independent parts)
-    used = op["sram_used"]
-    if n:
-        b = (used[1:] != used[:-1]) & (seg[1:] == seg[:-1])
-        changes = bk.segment_sum(xp.where(b, 1.0, 0.0), seg[1:], w)
-        starts = offsets[:-1]
-        nonempty = offsets[1:] > starts
-        first_used = used[xp.clip(starts, 0, n - 1)]
-        first = xp.where(nonempty & (first_used < 1.0), 1.0, 0.0)
-    else:
-        changes = xp.zeros(w)
-        first = xp.zeros(w)
-    ctx = {
-        "D_seg": d_seg, "dyn": dyn,
-        "sram_U": segsum(durn * used),
-        "sram_GU": segsum(durn * (1.0 - used)),
-        "sram_setpm": 2.0 * (changes + first),
-        "sram_dyn": scal["dyn_w_sram"] * 0.5 * segsum(op["max4"] * cnt),
-    }
+        return opsum(v, seg, w)
 
     cells = _distinct_cells(policies)
     states = _sram_states(policies)
+    used = op["sram_used"]
 
-    # SA spatial occupancy is linear in leak_logic with knob-independent
-    # segment sums: occ = A + leak_logic * B per op
-    occ_a = xp.where(op["has_mm"], op["frac_on"]
-                     + scal["leak_pe_weight_on"] * op["frac_w_on"], 1.0)
-    occ_b = xp.where(op["has_mm"], op["frac_off"], 0.0)
-    sa_occ_an_a = segsum(occ_a * comp["sa"]["acnt"])
-    sa_occ_an_b = segsum(occ_b * comp["sa"]["acnt"])
+    def per_saw(kd):
+        """Everything that depends on the SA width alone: traced
+        service times + PE occupancy (``trace_times``, bitwise-equal
+        float64 ops), the per-op gap/slack structures, and the
+        per-segment base sums the leakage knobs assemble from
+        linearly. Vmapped over the UNIQUE widths only — a pure delay/
+        leakage grid computes all of this exactly once."""
+        saw = kd["saw"]
+        has_mm = op["has_mm"]
+        occ = bk.sa_occupancy(op["mm_m"], op["mm_k"], op["mm_n"], saw)
+        frac_on = xp.where(has_mm, occ["frac_on"], 0.0)
+        frac_w_on = xp.where(has_mm, occ["frac_w_on"], 0.0)
+        frac_off = xp.where(has_mm, occ["frac_off"], 0.0)
+        sa_flops = saw * saw * 2.0 * scal["n_sa"] * scal["freq"]
+        flops_cycles = op["mm_m"] * op["mm_k"] * op["mm_n"] / (saw * saw)
+        dur_cy = xp.where(has_mm, occ["duration_cycles"], 1.0)
+        e = xp.minimum(1.0, flops_cycles / xp.maximum(1e-9, dur_cy))
+        eff = xp.where(has_mm & (op["flops_sa"] > 0),
+                       xp.maximum(e, 1e-3), 1.0)
+        t = {"sa": xp.where(op["flops_sa"] > 0,
+                            op["flops_sa"] / (sa_flops * eff), 0.0),
+             "vu": xp.where(op["flops_vu"] > 0,
+                            op["flops_vu"] / scal["vu_flops"], 0.0),
+             "hbm": xp.where(op["bytes_hbm"] > 0,
+                             op["bytes_hbm"] / scal["hbm_bw"], 0.0),
+             "ici": xp.where(op["bytes_ici"] > 0,
+                             op["bytes_ici"] / scal["ici_bw"], 0.0)}
+        max4 = xp.maximum(xp.maximum(t["sa"], t["vu"]),
+                          xp.maximum(t["hbm"], t["ici"]))
+        dur = xp.maximum(max4, 1e-12)
+        durn = dur * cnt
 
-    def heavy(kd):
-        """All O(n_ops)-sized masked merges for ONE delay scale: the
-        primitives every leakage knob assembles from linearly."""
-        d = kd["dscale"]
-        out = {}
+        base = {"D_seg": segsum(durn)}
+        comp: dict[str, dict] = {}
+        for c in _BK_COMPS:
+            a = t[c]
+            active = a > 0
+            gseg = data["gap_seg"][c]
+            gap_vals = opsum(xp.where(active, 0.0, durn),
+                             op[f"chunk_{c}"], gseg.shape[0])
+            slack = xp.where(active, dur - a, 0.0)
+            comp[c] = {"gap_vals": gap_vals, "slack": slack,
+                       "scnt": slack * cnt}
+            # gap_vals is already globally summed (and so replicated
+            # across wl shards): its per-segment merges need no psum
+            base[f"S_gap_{c}"] = bk.segment_sum(gap_vals, gseg, w)
+            base[f"S_slk_{c}"] = segsum(slack * cnt)
+            base[f"AN_{c}"] = segsum(a * cnt)
+            acnt = a * cnt
+            if c == "sa":
+                sa_acnt = acnt
+        for c in ("vu", "hbm", "ici"):
+            base[f"dyn_{c}"] = scal[f"dyn_w_{c}"] * base[f"AN_{c}"]
+        base["dyn_sa"] = scal["dyn_w_sa"] * segsum(
+            op["flops_sa"] / sa_flops * cnt)
+        # SA spatial occupancy is linear in leak_logic with
+        # width-dependent segment sums: occ = A + leak_logic * B per op
+        base["occ_ideal_AN"] = segsum(
+            xp.where(has_mm, frac_on, 1.0) * sa_acnt)
+        base["sa_occ_an_a"] = segsum(xp.where(
+            has_mm, frac_on + scal["leak_pe_weight_on"] * frac_w_on,
+            1.0) * sa_acnt)
+        base["sa_occ_an_b"] = segsum(
+            xp.where(has_mm, frac_off, 0.0) * sa_acnt)
+        # VU fine-grained burst structure (paper Fig 15)
+        vu = comp["vu"]
+        sel = (t["vu"] > 0) & (vu["slack"] > 0)
+        active_cy = xp.maximum(1.0, scal["freq"] * t["vu"])
+        n_bursts = xp.maximum(1.0, active_cy / scal["vu_burst_cycles"])
+        gap_raw = scal["freq"] * vu["slack"] / n_bursts
+        psn = scal["static_w_vu"] * vu["slack"] * cnt
+        vu.update(sel=sel, nbn=n_bursts * cnt,
+                  gap_cy=xp.where(sel, gap_raw, 0.0),
+                  inv_gap=xp.where(sel, 1.0 / xp.where(sel, gap_raw, 1.0),
+                                   0.0),
+                  psn=psn)
+        base["PSN_seg"] = segsum(psn)
+        # SRAM capacity model (the demand pattern is width-independent;
+        # the setpm boundary count is knob-free and counted host-side)
+        base["sram_U"] = segsum(durn * used)
+        base["sram_GU"] = segsum(durn * (1.0 - used))
+        base["sram_dyn"] = scal["dyn_w_sram"] * 0.5 * segsum(max4 * cnt)
+        return {"base": base, "comp": comp}
+
+    sb = bk.vmap_knobs(per_saw, {"saw": knobs["saw_unique"]})
+    if knob_axis:
+        # the unique-width axis is device-sharded too: gather the
+        # per-saw structures (small: (S, n) per-op columns and (S, W)
+        # sums) so every device can run its local pairs and knobs
+        sb = bk.all_gather(sb, knob_axis)
+
+    def per_pair(kd):
+        """The masked threshold merges for ONE (saw, delay-scale) pair;
+        the width-dependent structures are gathered from the stacked
+        per-saw pass by index."""
+        si, d = kd["si"], kd["dscale"]
+        comp = {c: {q: arr[si] for q, arr in cd.items()}
+                for c, cd in sb["comp"].items()}
+        prims = {}
         for cid, (c, pol) in cells.items():
             if pol.mode not in ("hw", "sw"):
                 continue  # none/ideal need no masked primitives
@@ -1210,13 +1280,13 @@ def _sweep_kernel(data, knobs, policies, bk):
                 gmask = gv > window
             else:
                 gmask = (gv >= xp.maximum(bet, 2.0 * delay)) & (gv > 0)
-            o = {"GM": bk.segment_sum(xp.where(gmask, gv, 0.0),
-                                      cc["gap_seg"], w),
+            gseg = data["gap_seg"][c]
+            o = {"GM": bk.segment_sum(xp.where(gmask, gv, 0.0), gseg, w),
                  "GC": bk.segment_sum(xp.where(gmask, 1.0, 0.0),
-                                      cc["gap_seg"], w)}
+                                      gseg, w)}
             if c == "vu":
-                # fine-grained burst slack (paper Fig 15): static energy
-                # is VA + leak * VB; VG is gated seconds, NB burst count
+                # fine-grained burst slack: static energy is
+                # VA + leak * VB; VG is gated seconds, NB burst count
                 bet_cy = scal["bet_vu"] * d
                 delay_cy = scal["delay_vu"] * d
                 gap_cy = cc["gap_cy"]
@@ -1247,11 +1317,18 @@ def _sweep_kernel(data, knobs, policies, bk):
                         & (slack > 0)
                 o["SM"] = segsum(xp.where(smask, cc["scnt"], 0.0))
                 o["SC"] = segsum(xp.where(smask, cnt, 0.0))
-            out[cid] = o
-        return out
+            prims[cid] = o
+        return prims
 
-    prims = bk.vmap_knobs(heavy, {"dscale": knobs["dscale_unique"]})
-    inv = knobs["dscale_inv"]
+    all_prims = bk.vmap_knobs(per_pair, {"si": knobs["pair_saw_idx"],
+                                         "dscale": knobs["pair_dscale"]})
+    if knob_axis:
+        # pairs are device-sharded: gather the (U, W)-sized primitives
+        # so every device can assemble its local knob slice
+        all_prims = bk.all_gather(all_prims, knob_axis)
+    inv = knobs["pair_inv"]
+    # per-knob base sums: (K, W) via the knob -> unique-width index
+    base = {k: v[knobs["saw_inv"]] for k, v in sb["base"].items()}
 
     # ---- full-knob assembly: O(W × K) linear algebra on the primitives
     k_full = knobs["dscale"].shape[0]
@@ -1260,7 +1337,6 @@ def _sweep_kernel(data, knobs, policies, bk):
 
     def cell(c, pol):
         """(K, W) closed-form assembly of one ``_comp_cell``."""
-        cc = comp[c]
         p = scal[f"static_w_{c}"]
         leak = leak_logic
         if c == "hbm":
@@ -1268,10 +1344,11 @@ def _sweep_kernel(data, knobs, policies, bk):
             leak = xp.maximum(leak, scal["leak_hbm_refresh"])
         acc = {q: xp.zeros((k_full, w)) for q in
                ("static", "overhead", "wakes", "setpm", "gated")}
-        s_gap = cc["S_gap"]
+        s_gap = base[f"S_gap_{c}"]
         gating = pol.mode in ("hw", "sw")
         if gating:
-            pr = {q: a[inv] for q, a in prims[_cell_id(c, pol)].items()}
+            pr = {q: a[inv]
+                  for q, a in all_prims[_cell_id(c, pol)].items()}
             bet = scal[f"bet_{pol.delay_key}"] * dscale / scal["freq"]
             delay = scal[f"delay_{pol.delay_key}"] * dscale / scal["freq"]
             window = bet * scal["window_frac"]
@@ -1300,19 +1377,19 @@ def _sweep_kernel(data, knobs, policies, bk):
         # --- active-portion static (SA: PE-occupancy weighted) ---
         if c == "sa" and pol.spatial_sa:
             if pol.mode == "ideal":
-                acc["static"] = acc["static"] + p * cc["occ_ideal_AN"]
+                acc["static"] = acc["static"] + p * base["occ_ideal_AN"]
             else:
                 acc["static"] = acc["static"] + p * (
-                    sa_occ_an_a + leak_logic * sa_occ_an_b)
+                    base["sa_occ_an_a"] + leak_logic * base["sa_occ_an_b"])
         else:
-            acc["static"] = acc["static"] + p * cc["AN"]
+            acc["static"] = acc["static"] + p * base[f"AN_{c}"]
 
         # --- within-op slack (per executed instance) ---
         if c == "vu":
             if pol.mode == "none":
-                acc["static"] = acc["static"] + cc["PSN_seg"]
+                acc["static"] = acc["static"] + base["PSN_seg"]
             elif pol.mode == "ideal":
-                acc["gated"] = acc["gated"] + cc["S_slk"]
+                acc["gated"] = acc["gated"] + base["S_slk_vu"]
             else:
                 acc["static"] = acc["static"] + pr["VA"] + leak * pr["VB"]
                 acc["gated"] = acc["gated"] + pr["VG"]
@@ -1325,7 +1402,7 @@ def _sweep_kernel(data, knobs, policies, bk):
                     acc["setpm"] = acc["setpm"] + 2.0 * nb
                 acc["wakes"] = acc["wakes"] + nb
         else:
-            s_slk = cc["S_slk"]
+            s_slk = base[f"S_slk_{c}"]
             if pol.mode == "none":
                 acc["static"] = acc["static"] + p * s_slk
             elif pol.mode == "ideal":
@@ -1359,24 +1436,64 @@ def _sweep_kernel(data, knobs, policies, bk):
               "off": knobs["leak_off"][:, None]}.get(
                   state, xp.zeros((k_full, 1)))
         out_sram[state] = scal["static_w_sram"] * (
-            ctx["sram_U"] + lk * ctx["sram_GU"])
-    return {"cells": out_cells, "sram": out_sram}, ctx
+            base["sram_U"] + lk * base["sram_GU"])
+    return {"cells": out_cells, "sram": out_sram,
+            "D_seg": base["D_seg"],
+            "dyn": {c: base[f"dyn_{c}"] for c in _BK_COMPS},
+            "sram_GU": base["sram_GU"], "sram_dyn": base["sram_dyn"]}
 
 
-_KERNELS: dict[str, object] = {}
+# jitted sweep kernels cached per (backend, occupancy impl): the jax
+# program compiles once per (stack shape, knob count, policies) and is
+# reused across NPU generations and repeated sweeps
+_KERNELS: dict[tuple, object] = {}
 
 
 def _backend_kernel(bk):
-    """The (possibly jitted) sweep kernel for one backend. Cached per
-    backend so the jax program compiles once per (stack shape, knob
-    count, policies) and is reused across NPU generations and repeated
-    sweeps."""
-    fn = _KERNELS.get(bk.name)
+    """The (possibly jitted) single-device sweep kernel for one
+    backend + occupancy-impl selection."""
+    key = (bk.name, bk.sa_occupancy_impl)
+    fn = _KERNELS.get(key)
     if fn is None:
         def kern(data, knobs, policies):
             return _sweep_kernel(data, knobs, policies, bk)
         fn = bk.jit(kern, static_argnames=("policies",))
-        _KERNELS[bk.name] = fn
+        _KERNELS[key] = fn
+    return fn
+
+
+# shard_map sweep programs, keyed by (backend, occupancy impl, mesh
+# identity, policies, axes); the value keeps a strong ref to the mesh
+# so its id cannot be reused while the entry lives
+_SHARD_KERNELS: dict[tuple, tuple] = {}
+
+
+def _shard_kernel(bk, mesh, policies, wl_axis, knob_axis):
+    """One SPMD sweep program over ``mesh``: op columns sharded over
+    ``wl_axis`` (completed by in-kernel psums), unique (saw, delay)
+    pairs and the knob grid sharded over ``knob_axis``; everything
+    else replicated. Inputs must be padded to the axis sizes
+    (``_sharded_backend_data`` / ``_knob_arrays(pad_to=...)``)."""
+    key = (bk.name, bk.sa_occupancy_impl, id(mesh), policies,
+           wl_axis, knob_axis)
+    hit = _SHARD_KERNELS.get(key)
+    if hit is not None and hit[0] is mesh:
+        return hit[1]
+    pspec = bk.pspec
+    data_spec = {"op": pspec(wl_axis) if wl_axis else pspec(),
+                 "gap_seg": pspec(), "offsets": pspec(), "scal": pspec()}
+    # every knob-array axis (knobs, pairs, unique widths) is sharded
+    # over the knob mesh axis; the kernel gathers what it must share
+    knob_spec = pspec(knob_axis)
+
+    def body(data, knobs):
+        return _sweep_kernel(data, knobs, policies, bk,
+                             wl_axis=wl_axis, knob_axis=knob_axis)
+
+    fn = bk.shard_map_kernel(body, mesh,
+                             in_specs=(data_spec, knob_spec),
+                             out_specs=pspec(knob_axis))
+    _SHARD_KERNELS[key] = (mesh, fn)
     return fn
 
 
@@ -1393,39 +1510,53 @@ def _gap_indices(st: StackedTrace) -> dict[str, tuple]:
     return hit
 
 
-def _backend_data(st: StackedTrace, npu: NPUSpec, bk) -> dict:
-    """Per-(stack, NPU) kernel input pytree, transferred to the backend
-    once and cached on the stack (spec-identity keyed, same convention
-    as ``_batch_ctx``). Per-NPU scalars enter as 0-d arrays so swapping
-    generations never retraces the compiled program."""
-    key = ("backend_data", bk.name, id(npu))
+def _mm_columns(st: StackedTrace) -> tuple[np.ndarray, ...]:
+    """Concatenated float64 matmul-dim columns (NPU-independent; the
+    kernel consumes them as exact-integer floats so the traced
+    occupancy math stays bitwise equal to the int64 host path)."""
+    hit = st._derived.get("mm_columns")
+    if hit is None:
+        def cat(attr):
+            if not st.traces:
+                return np.zeros(0)
+            return np.concatenate(
+                [getattr(tr, attr) for tr in st.traces]).astype(np.float64)
+        hit = (cat("mm_m"), cat("mm_k"), cat("mm_n"))
+        st._derived["mm_columns"] = hit
+    return hit
+
+
+def _host_columns(st: StackedTrace, npu: NPUSpec) -> tuple[dict,
+                                                           np.ndarray]:
+    """Host-side kernel input pytree for one (stack, NPU) plus the
+    knob-free SRAM setpm boundary counts (W,).
+
+    Only *raw* trace columns and per-NPU scalars — no service times, no
+    occupancy: those are traced inside the kernel now, which is what
+    lets ``sa_width`` ride the knob axis. Per-NPU scalars enter as 0-d
+    arrays so swapping generations never retraces the compiled
+    program. Cached on the stack (spec-identity keyed)."""
+    key = ("host_columns", id(npu))
     hit = st._derived.get(key)
     if hit is not None and hit[0] is npu:
-        return hit[1]
-    tms = [trace_times(tr, npu) for tr in st.traces]
-
-    def cat(k):
-        if not tms:
-            return np.zeros(0)
-        return np.concatenate([tm[k] for tm in tms])
-
-    tm = {k: cat(k) for k in ("sa", "vu", "hbm", "ici", "dur", "max4",
-                              "frac_on", "frac_w_on", "frac_off")}
+        return hit[1], hit[2]
     gidx = _gap_indices(st)
+    mm_m, mm_k, mm_n = _mm_columns(st)
     pm = PowerModel(npu)
     g = npu.gating
+    used = np.minimum(1.0, st.sram_demand / npu.sram_bytes)
     op = {
-        "seg_ids": st.seg_ids, "cnt": st.count, "dur": tm["dur"],
-        "durn": tm["dur"] * st.count,
-        "flops_sa": st.flops_sa, "has_mm": st.has_mm,
-        "frac_on": tm["frac_on"], "frac_w_on": tm["frac_w_on"],
-        "frac_off": tm["frac_off"], "max4": tm["max4"],
-        "sram_used": np.minimum(1.0, st.sram_demand / npu.sram_bytes),
+        "seg_ids": st.seg_ids, "cnt": st.count,
+        "flops_sa": st.flops_sa, "flops_vu": st.flops_vu,
+        "bytes_hbm": st.bytes_hbm, "bytes_ici": st.bytes_ici,
+        "has_mm": st.has_mm, "mm_m": mm_m, "mm_k": mm_k, "mm_n": mm_n,
+        "sram_used": used,
     }
     for c in _BK_COMPS:
-        op[f"t_{c}"] = tm[c]
         op[f"chunk_{c}"] = gidx[c][0]
-    scal = {"freq": npu.freq_hz, "sa_flops": npu.sa_flops,
+    scal = {"freq": npu.freq_hz, "n_sa": float(npu.n_sa),
+            "vu_flops": npu.vu_flops, "hbm_bw": npu.hbm_bw,
+            "ici_bw": npu.ici_bw,
             "window_frac": g.detection_window_frac,
             "leak_hbm_refresh": g.leak_hbm_refresh,
             "leak_pe_weight_on": g.leak_pe_weight_on,
@@ -1438,36 +1569,134 @@ def _backend_data(st: StackedTrace, npu: NPUSpec, bk) -> dict:
         scal[f"bet_{k}"] = float(v)
     for k, v in g.on_off_delay.items():
         scal[f"delay_{k}"] = float(v)
+    # SRAM setpm: one range-setpm pair per demand-CHANGE boundary
+    # (knob- and width-free → counted here, off the traced path)
+    w = st.n_segments
+    changes = np.zeros(w)
+    first = np.zeros(w)
+    if st.n_ops:
+        b = (used[1:] != used[:-1]) & (st.seg_ids[1:] == st.seg_ids[:-1])
+        changes = np.bincount(st.seg_ids[1:][b],
+                              minlength=w).astype(np.float64)
+        starts = st.offsets[:-1]
+        nonempty = st.offsets[1:] > starts
+        first[nonempty] = used[starts[nonempty]] < 1.0
+    sram_setpm = 2.0 * (changes + first)
+    host = {"op": op, "gap_seg": {c: gidx[c][1] for c in _BK_COMPS},
+            "offsets": st.offsets, "scal": scal}
+    st._derived[key] = (npu, host, sram_setpm)
+    return host, sram_setpm
 
-    def put(tree):
-        if isinstance(tree, dict):
-            return {k: put(v) for k, v in tree.items()}
-        return bk.asarray(tree)
 
-    data = put({"op": op, "gap_seg": {c: gidx[c][1] for c in _BK_COMPS},
-                "offsets": st.offsets, "scal": scal})
-    st._derived[key] = (npu, data)
-    return data
+def _put_tree(tree, bk):
+    if isinstance(tree, dict):
+        return {k: _put_tree(v, bk) for k, v in tree.items()}
+    return bk.asarray(tree)
 
 
-def _knob_arrays(knob_grid, g, bk) -> dict:
+def _backend_data(st: StackedTrace, npu: NPUSpec, bk) \
+        -> tuple[dict, np.ndarray]:
+    """``_host_columns`` transferred to the backend once and cached on
+    the stack (spec-identity keyed, same convention as ``_batch_ctx``)."""
+    key = ("backend_data", bk.name, id(npu))
+    hit = st._derived.get(key)
+    if hit is not None and hit[0] is npu:
+        return hit[1], hit[2]
+    host, sram_setpm = _host_columns(st, npu)
+    data = _put_tree(host, bk)
+    st._derived[key] = (npu, data, sram_setpm)
+    return data, sram_setpm
+
+
+def _sharded_backend_data(st: StackedTrace, npu: NPUSpec, bk,
+                          wl_size: int) -> tuple[dict, np.ndarray]:
+    """``_backend_data`` with the op axis padded to a multiple of the
+    ``wl`` mesh-axis size so ``shard_map`` can split it evenly.
+
+    Padded ops are inert by construction: count 0, no FLOPs/bytes (so
+    never active, zero duration), sentinel 1×1×1 matmul dims with
+    ``has_mm`` False, and segment/chunk ids pinned to the LAST id —
+    keeping the ids sorted (the jax segment sums rely on it) while the
+    zero weights contribute nothing to any segment."""
+    key = ("backend_data_sharded", bk.name, id(npu), wl_size)
+    hit = st._derived.get(key)
+    if hit is not None and hit[0] is npu:
+        return hit[1], hit[2]
+    host, sram_setpm = _host_columns(st, npu)
+    op = dict(host["op"])
+    n = len(op["seg_ids"])
+    pad = (-n) % wl_size
+    if pad:
+        fill = {"seg_ids": st.n_segments - 1, "has_mm": False,
+                "mm_m": 1.0, "mm_k": 1.0, "mm_n": 1.0}
+        for k, a in op.items():
+            if k.startswith("chunk_"):
+                v = max(len(host["gap_seg"][k[6:]]) - 1, 0)
+            else:
+                v = fill.get(k, 0.0)
+            op[k] = np.concatenate([a, np.full(pad, v, a.dtype)])
+    data = _put_tree({**host, "op": op}, bk)
+    st._derived[key] = (npu, data, sram_setpm)
+    return data, sram_setpm
+
+
+def _knob_arrays(knob_grid, npu: NPUSpec, bk, pad_to: int = 0) -> dict:
+    """Knob-grid arrays for the kernel: the full per-knob columns plus
+    the unique (sa_width, delay_scale) pairs the heavy passes vmap
+    over, with the inverse index mapping pairs back onto the grid.
+    ``pad_to`` pads the knob and pair axes to a multiple (repeating
+    entry 0) so ``shard_map`` can split them evenly — the host slices
+    the padded tail off the outputs."""
+    g = npu.gating
     ds = np.array([k.delay_scale for k in knob_grid], np.float64)
-    ds_unique, ds_inv = np.unique(ds, return_inverse=True)
+    saw = np.array([float(k.sa_width) if k.sa_width is not None
+                    else float(npu.sa_width) for k in knob_grid])
+    leak_logic = np.array(
+        [k.leak_off_logic if k.leak_off_logic is not None
+         else g.leak_off_logic for k in knob_grid], np.float64)
+    leak_sleep = np.array(
+        [k.leak_sram_sleep if k.leak_sram_sleep is not None
+         else g.leak_sram_sleep for k in knob_grid], np.float64)
+    leak_off = np.array(
+        [k.leak_sram_off if k.leak_sram_off is not None
+         else g.leak_sram_off for k in knob_grid], np.float64)
+    saw_unique, saw_inv = np.unique(saw, return_inverse=True)
+    saw_inv = saw_inv.reshape(-1).astype(np.int64)
+    pairs = np.stack([saw, ds], axis=1)
+    uniq, inv = np.unique(pairs, axis=0, return_inverse=True)
+    inv = inv.reshape(-1).astype(np.int64)
+    pair_saw_idx = np.searchsorted(saw_unique, uniq[:, 0]).astype(np.int64)
+    pair_ds = uniq[:, 1].copy()
+
+    def padded(a, m):
+        p = (-len(a)) % m
+        return a if p == 0 else np.concatenate([a, np.repeat(a[:1], p)])
+
+    if pad_to:
+        ds, leak_logic, leak_sleep, leak_off, inv, saw_inv = (
+            padded(a, pad_to)
+            for a in (ds, leak_logic, leak_sleep, leak_off, inv,
+                      saw_inv))
+        # pair and unique-width axes are device-sharded as well; pads
+        # repeat entry 0 / width 0 (inert duplicates — the inverse
+        # indices never point at them, padding sits at the END)
+        pair_saw_idx, pair_ds, saw_unique = (
+            padded(a, pad_to)
+            for a in (pair_saw_idx, pair_ds, saw_unique))
     return {
         "dscale": bk.asarray(ds),
-        # masked-merge primitives are computed once per distinct delay
-        # scale; the inverse index maps them back onto the full grid
-        "dscale_unique": bk.asarray(ds_unique),
-        "dscale_inv": bk.asarray(ds_inv.astype(np.int64)),
-        "leak_logic": bk.asarray(np.array(
-            [k.leak_off_logic if k.leak_off_logic is not None
-             else g.leak_off_logic for k in knob_grid], np.float64)),
-        "leak_sleep": bk.asarray(np.array(
-            [k.leak_sram_sleep if k.leak_sram_sleep is not None
-             else g.leak_sram_sleep for k in knob_grid], np.float64)),
-        "leak_off": bk.asarray(np.array(
-            [k.leak_sram_off if k.leak_sram_off is not None
-             else g.leak_sram_off for k in knob_grid], np.float64)),
+        "leak_logic": bk.asarray(leak_logic),
+        "leak_sleep": bk.asarray(leak_sleep),
+        "leak_off": bk.asarray(leak_off),
+        # the width-dependent base pass runs once per distinct width
+        # (replicated under shard_map); the heavy masked merges once per
+        # distinct (width, delay) pair; the inverse indices map both
+        # back onto the full grid
+        "saw_unique": bk.asarray(saw_unique),
+        "saw_inv": bk.asarray(saw_inv),
+        "pair_saw_idx": bk.asarray(pair_saw_idx),
+        "pair_dscale": bk.asarray(pair_ds),
+        "pair_inv": bk.asarray(inv),
     }
 
 
@@ -1476,8 +1705,12 @@ def _evaluate_batch_backend(workloads, npu_specs, policies, knob_grid,
     """``evaluate_batch`` through the backend-neutral kernel.
 
     On the jax backend the whole per-NPU evaluation is one jitted
-    program; per-op inputs can optionally be sharded over the stacked
-    workload axis of a ``parallel.jax_compat`` mesh.
+    program. A ``parallel.jax_compat`` mesh selects the multi-device
+    path: a mesh with a ``"knob"`` axis (optionally crossed with
+    ``"wl"``) runs the explicit ``shard_map`` program — pairs + knobs
+    sharded over ``"knob"``, op columns over ``"wl"`` — while a pure
+    ``("wl",)`` mesh keeps the GSPMD path (sharded ``device_put`` into
+    the ordinary jitted kernel).
     """
     st = stack_traces(workloads)
     policies = tuple(policies)
@@ -1497,24 +1730,44 @@ def _evaluate_batch_backend(workloads, npu_specs, policies, knob_grid,
         wake_events=wake_events, gated_s=gated_s, setpm_by=setpm_by)
     if w == 0:
         return result
-    kern = _backend_kernel(bk)
+    wl_axis = knob_axis = None
+    wl_size = knob_size = 1
+    if mesh is not None:
+        sizes = bk.mesh_axis_sizes(mesh)
+        if "knob" in sizes:
+            knob_axis, knob_size = "knob", sizes["knob"]
+            if "wl" in sizes:
+                wl_axis, wl_size = "wl", sizes["wl"]
     with bk.compute_scope():
         for ai, npu in enumerate(npu_specs):
-            data = _backend_data(st, npu, bk)
-            if mesh is not None:
-                data = bk.shard_data(data, mesh)
-            knobs = _knob_arrays(knob_grid, npu.gating, bk)
-            vm, ctx = bk.block(kern(data, knobs, policies))
-            cells = {cid: {q: bk.to_numpy(arr).T  # (K, W) -> (W, K)
-                           for q, arr in d.items()}
+            if knob_axis is not None:
+                data, sram_setpm = _sharded_backend_data(st, npu, bk,
+                                                         wl_size)
+                knobs = _knob_arrays(knob_grid, npu, bk,
+                                     pad_to=knob_size)
+                kern = _shard_kernel(bk, mesh, policies, wl_axis,
+                                     knob_axis)
+                vm = bk.block(kern(data, knobs))
+            else:
+                data, sram_setpm = _backend_data(st, npu, bk)
+                if mesh is not None:
+                    data = bk.shard_data(data, mesh)
+                knobs = _knob_arrays(knob_grid, npu, bk)
+                kern = _backend_kernel(bk)
+                vm = bk.block(kern(data, knobs, policies))
+
+            def harvest(arr):
+                # (K_pad, W) -> (W, K); drop any shard padding
+                return bk.to_numpy(arr)[:k_n].T
+
+            cells = {cid: {q: harvest(arr) for q, arr in d.items()}
                      for cid, d in vm["cells"].items()}
-            sram_static = {s: bk.to_numpy(arr).T
+            sram_static = {s: harvest(arr)
                            for s, arr in vm["sram"].items()}
-            d_seg = bk.to_numpy(ctx["D_seg"])
-            dyn = {c: bk.to_numpy(ctx["dyn"][c]) for c in _BK_COMPS}
-            sram_gu = bk.to_numpy(ctx["sram_GU"])
-            sram_setpm = bk.to_numpy(ctx["sram_setpm"])
-            sram_dyn = bk.to_numpy(ctx["sram_dyn"])
+            d_seg = harvest(vm["D_seg"])
+            dyn = {c: harvest(vm["dyn"][c]) for c in _BK_COMPS}
+            sram_gu = harvest(vm["sram_GU"])
+            sram_dyn = harvest(vm["sram_dyn"])
             pm = PowerModel(npu)
             for pi, policy in enumerate(policies):
                 cp = _component_policies(policy)
@@ -1525,21 +1778,21 @@ def _evaluate_batch_backend(workloads, npu_specs, policies, knob_grid,
                     wake_events[c][:, ai, pi, :] = cl["wakes"]
                     setpm_by[c][:, ai, pi, :] = cl["setpm"]
                     gated_s[c][:, ai, pi, :] = cl["gated"]
-                    dynamic_j[c][:, ai, pi, :] = dyn[c][:, None]
+                    dynamic_j[c][:, ai, pi, :] = dyn[c]
                     ov_total += cl["overhead"]
                 pol = cp["sram"]
                 static_j["sram"][:, ai, pi, :] = \
                     sram_static[pol.sram_state]
                 if pol.sram_state != "on":
-                    gated_s["sram"][:, ai, pi, :] = sram_gu[:, None]
+                    gated_s["sram"][:, ai, pi, :] = sram_gu
                 if pol.sram_state in ("sleep", "off") and pol.mode == "sw":
                     setpm_by["sram"][:, ai, pi, :] = sram_setpm[:, None]
-                dynamic_j["sram"][:, ai, pi, :] = sram_dyn[:, None]
+                dynamic_j["sram"][:, ai, pi, :] = sram_dyn
                 static_j["other"][:, ai, pi, :] = \
-                    (pm.static_w["other"] * d_seg)[:, None]
+                    pm.static_w["other"] * d_seg
                 dynamic_j["other"][:, ai, pi, :] = \
-                    (pm.dyn_max_w["other"] * 0.3 * d_seg)[:, None]
-                runtime[:, ai, pi, :] = d_seg[:, None] + ov_total
+                    pm.dyn_max_w["other"] * 0.3 * d_seg
+                runtime[:, ai, pi, :] = d_seg + ov_total
     return result
 
 
@@ -1561,8 +1814,12 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     shape, float64, reused across NPU generations; ≤1e-9 equivalent to
     the numpy path record-for-record). ``None`` resolves to the session
     default (``repro.core.backend.set_default_backend``). ``jax_mesh``
-    optionally shards the stacked per-op arrays over the ``"wl"`` axis
-    of a ``parallel.jax_compat`` mesh (jax backend only).
+    scales the jax path across devices (``parallel.jax_compat``; e.g.
+    ``jax_compat.sweep_mesh``): a pure ``("wl",)`` mesh shards the
+    stacked per-op arrays under GSPMD, while a mesh with a ``"knob"``
+    axis — optionally crossed with ``"wl"`` — runs the explicit
+    ``shard_map`` program that also shards the unique-width /
+    (width, delay)-pair / knob axes (jax backend only).
     """
     if isinstance(workloads, Workload):
         workloads = [workloads]
@@ -1588,62 +1845,76 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     gated_s = {c: np.zeros(shape) for c in COMPONENTS}
     setpm_by = {c: np.zeros(shape) for c in COMPONENTS}
 
-    for ai, npu in enumerate(npu_specs):
-        ctx = _batch_ctx(st, npu)
-        g = ctx["gating"]
-        kp = {
-            "K": K,
-            "dscale": np.array([k.delay_scale for k in knob_grid]),
-            "leak_logic": np.array(
-                [k.leak_off_logic if k.leak_off_logic is not None
-                 else g.leak_off_logic for k in knob_grid]),
-            "leak_sleep": np.array(
-                [k.leak_sram_sleep if k.leak_sram_sleep is not None
-                 else g.leak_sram_sleep for k in knob_grid]),
-            "leak_off": np.array(
-                [k.leak_sram_off if k.leak_sram_off is not None
-                 else g.leak_sram_off for k in knob_grid]),
-        }
-        cell_cache: dict = {}
-        for pi, policy in enumerate(policies):
-            cp = _component_policies(policy)
-            ov_total = np.zeros((W, K))
-            for c in ("sa", "vu", "hbm", "ici"):
-                key = (c, cp[c])
-                cell = cell_cache.get(key)
-                if cell is None:
-                    cell = _comp_cell(ctx, c, cp[c], kp)
-                    cell_cache[key] = cell
-                static_j[c][:, ai, pi, :] = cell["static"]
-                wake_events[c][:, ai, pi, :] = cell["wakes"]
-                setpm_by[c][:, ai, pi, :] = cell["setpm"]
-                gated_s[c][:, ai, pi, :] = cell["gated"]
-                dynamic_j[c][:, ai, pi, :] = \
-                    ctx["comp"][c]["dyn_seg"][:, None]
-                ov_total += cell["overhead"]
+    for ai, base_npu in enumerate(npu_specs):
+        # group the knob grid by effective SA width: each group runs on
+        # a memoized width-variant spec (the scalar engines' oracle
+        # semantics), scattering its columns back into the knob axis
+        saw_of = [k.sa_width if k.sa_width is not None
+                  else base_npu.sa_width for k in knob_grid]
+        for saw in dict.fromkeys(saw_of):
+            idx = np.flatnonzero(np.array(saw_of) == saw)
+            sub_grid = [knob_grid[i] for i in idx]
+            npu = with_sa_width(base_npu, saw)
+            ctx = _batch_ctx(st, npu)
+            g = ctx["gating"]
+            kp = {
+                "K": len(sub_grid),
+                "dscale": np.array([k.delay_scale for k in sub_grid]),
+                "leak_logic": np.array(
+                    [k.leak_off_logic if k.leak_off_logic is not None
+                     else g.leak_off_logic for k in sub_grid]),
+                "leak_sleep": np.array(
+                    [k.leak_sram_sleep if k.leak_sram_sleep is not None
+                     else g.leak_sram_sleep for k in sub_grid]),
+                "leak_off": np.array(
+                    [k.leak_sram_off if k.leak_sram_off is not None
+                     else g.leak_sram_off for k in sub_grid]),
+            }
+            cell_cache: dict = {}
+            for pi, policy in enumerate(policies):
+                cp = _component_policies(policy)
+                ov_total = np.zeros((W, len(sub_grid)))
+                for c in ("sa", "vu", "hbm", "ici"):
+                    key = (c, cp[c])
+                    cell = cell_cache.get(key)
+                    if cell is None:
+                        cell = _comp_cell(ctx, c, cp[c], kp)
+                        cell_cache[key] = cell
+                    static_j[c][:, ai, pi, idx] = cell["static"]
+                    wake_events[c][:, ai, pi, idx] = cell["wakes"]
+                    setpm_by[c][:, ai, pi, idx] = cell["setpm"]
+                    gated_s[c][:, ai, pi, idx] = cell["gated"]
+                    dynamic_j[c][:, ai, pi, idx] = \
+                        ctx["comp"][c]["dyn_seg"][:, None]
+                    ov_total += cell["overhead"]
 
-            # --- SRAM: capacity-proportional static, demand-gated rest ---
-            pol = cp["sram"]
-            lk = {"on": np.ones(K), "sleep": kp["leak_sleep"],
-                  "off": kp["leak_off"]}.get(pol.sram_state, np.zeros(K))
-            static_j["sram"][:, ai, pi, :] = ctx["static_w"]["sram"] * (
-                ctx["sram_U_seg"][:, None]
-                + lk[None, :] * ctx["sram_GU_seg"][:, None])
-            if pol.sram_state != "on":
-                gated_s["sram"][:, ai, pi, :] = \
-                    ctx["sram_GU_seg"][:, None]
-            if pol.sram_state in ("sleep", "off") and pol.mode == "sw":
-                setpm_by["sram"][:, ai, pi, :] = \
-                    ctx["sram_setpm_seg"][:, None]
-            dynamic_j["sram"][:, ai, pi, :] = ctx["sram_dyn_seg"][:, None]
+                # --- SRAM: capacity-proportional static, gated rest ---
+                pol = cp["sram"]
+                lk = {"on": np.ones(len(sub_grid)),
+                      "sleep": kp["leak_sleep"],
+                      "off": kp["leak_off"]}.get(pol.sram_state,
+                                                 np.zeros(len(sub_grid)))
+                static_j["sram"][:, ai, pi, idx] = \
+                    ctx["static_w"]["sram"] * (
+                        ctx["sram_U_seg"][:, None]
+                        + lk[None, :] * ctx["sram_GU_seg"][:, None])
+                if pol.sram_state != "on":
+                    gated_s["sram"][:, ai, pi, idx] = \
+                        ctx["sram_GU_seg"][:, None]
+                if pol.sram_state in ("sleep", "off") \
+                        and pol.mode == "sw":
+                    setpm_by["sram"][:, ai, pi, idx] = \
+                        ctx["sram_setpm_seg"][:, None]
+                dynamic_j["sram"][:, ai, pi, idx] = \
+                    ctx["sram_dyn_seg"][:, None]
 
-            # --- other: never gated ---
-            static_j["other"][:, ai, pi, :] = \
-                (ctx["static_w"]["other"] * ctx["D_seg"])[:, None]
-            dynamic_j["other"][:, ai, pi, :] = \
-                (ctx["dyn_w"]["other"] * 0.3 * ctx["D_seg"])[:, None]
+                # --- other: never gated ---
+                static_j["other"][:, ai, pi, idx] = \
+                    (ctx["static_w"]["other"] * ctx["D_seg"])[:, None]
+                dynamic_j["other"][:, ai, pi, idx] = \
+                    (ctx["dyn_w"]["other"] * 0.3 * ctx["D_seg"])[:, None]
 
-            runtime[:, ai, pi, :] = ctx["D_seg"][:, None] + ov_total
+                runtime[:, ai, pi, idx] = ctx["D_seg"][:, None] + ov_total
 
     return BatchResult(
         workloads=tuple(st.names), npus=npu_specs, policies=policies,

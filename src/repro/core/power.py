@@ -47,13 +47,6 @@ DYN_SHARES = {"sa": 0.50, "vu": 0.12, "sram": 0.12, "hbm": 0.16,
 _TEMP_UPLIFT = {16: 1.35, 7: 1.65, 4: 1.85}
 
 
-def _static_shares(name: str) -> dict[str, float]:
-    """Per-generation share table, tolerant of derived-spec names:
-    sweep variants like ``NPU-D/saw256`` (``sweep.sweep_grid``'s
-    SA-width axis) inherit the base generation's calibration."""
-    return STATIC_SHARES[name.split("/", 1)[0]]
-
-
 @dataclass(frozen=True)
 class PowerModel:
     npu: NPUSpec
@@ -64,7 +57,7 @@ class PowerModel:
 
     @property
     def static_w(self) -> dict[str, float]:
-        shares = _static_shares(self.npu.name)
+        shares = STATIC_SHARES[self.npu.name]
         tot = self.static_busy_w
         return {c: tot * shares[c] for c in COMPONENTS}
 
@@ -88,7 +81,7 @@ class PowerModel:
         management island (``deep_idle_other_leak`` of their static power)
         — during busy intervals "other" is never gated (paper §3)."""
         g = self.npu.gating
-        shares = _static_shares(self.npu.name)
+        shares = STATIC_SHARES[self.npu.name]
         w = 0.0
         for c in COMPONENTS:
             if c in gated_components:

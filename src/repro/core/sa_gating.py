@@ -12,25 +12,36 @@ Three underutilization cases (paper Fig 10):
     only while input data passes through it; the PE_on signal propagates
     diagonally with the dataflow, costing one PE's wake-up delay total.
 
-Two implementations:
-  * ``gating_stats`` — closed-form PE-state occupancy for a (possibly
-    tiled) matmul; used by the energy simulator.
+Implementations (fastest first):
+  * ``gating_stats_batch_xp`` — the closed-form 4-category ragged-tile
+    math over a backend-neutral ``xp`` namespace (numpy or jax.numpy).
+    All intermediates are exact integers in float64 (< 2**53), so it is
+    bitwise identical to the int64 batch below — and because ``saw``
+    may be a *traced* scalar it is what lets the jitted sweep kernel
+    carry SA width as a knob axis (ISSUE 5).
+  * ``gating_stats_batch`` — vectorized int64 NumPy batch (the host
+    oracle used by ``trace_times``).
+  * ``gating_stats`` — LRU-cached scalar closed form (cache size
+    configurable via ``set_gating_cache_size`` / ``$REPRO_SA_GATING_CACHE``
+    so huge sweeps can bound it); ``gating_stats_reference`` /
+    ``gating_stats_batch_reference`` are the uncached oracles, so
+    equivalence tests never depend on cache state.
   * ``simulate_pe_grid`` — exact cycle-level simulation of the PE_on
-    propagation on a small grid; the property tests check the closed form
-    against it.
+    propagation on a small grid; the property tests check the closed
+    forms against it.
 
 The prefix-sum row/col logic (paper Fig 12) is ``prefix_on_bitmap`` and is
-shared by the Pallas ``gated_matmul`` kernel's tile-level analogue.
+shared by the Pallas ``gated_matmul`` / ``sa_occupancy`` kernels'
+tile-level analogues.
 """
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from functools import lru_cache as _lru_cache
 
 import numpy as np
-
-_lru = _lru_cache(maxsize=65536)
 
 
 def prefix_on_bitmap(nz: np.ndarray) -> np.ndarray:
@@ -64,14 +75,16 @@ def _tile_cycles(m: int, saw: int) -> float:
     return m + 2 * saw - 1
 
 
-@_lru
-def gating_stats(M: int, K: int, N: int, saw: int,
-                 weight_load_cycles: int | None = None) -> SAStats:
+def gating_stats_reference(M: int, K: int, N: int, saw: int,
+                           weight_load_cycles: int | None = None) -> SAStats:
     """Closed-form PE-state occupancy for [M,K]x[K,N] tiled onto the SA.
 
     Tiling: ceil(K/saw) x ceil(N/saw) weight tiles; M rows stream per tile.
     Only the LAST tile in each dimension is ragged, so the tile population
     has 4 categories (full, ragged-K, ragged-N, ragged-both) — O(1) math.
+
+    This is the *uncached* scalar oracle; ``gating_stats`` wraps it in a
+    configurable LRU.
     """
     if weight_load_cycles is None:
         weight_load_cycles = saw  # weights pushed row by row
@@ -104,6 +117,41 @@ def gating_stats(M: int, K: int, N: int, saw: int,
         frac_off=off / total_pe_cycles,
         wake_events=n_tiles,
     )
+
+
+# The scalar closed form sits behind an LRU because the execution plane
+# calls it per-op; a bounded default keeps huge generated sweeps from
+# growing the cache without limit (ISSUE 5). The public ``gating_stats``
+# delegates through a module global so resizing never invalidates
+# callers that imported the function object directly.
+_DEFAULT_CACHE_SIZE = int(os.environ.get("REPRO_SA_GATING_CACHE", 65536))
+_cached_gating_stats = _lru_cache(maxsize=_DEFAULT_CACHE_SIZE)(
+    gating_stats_reference)
+
+
+def gating_stats(M: int, K: int, N: int, saw: int,
+                 weight_load_cycles: int | None = None) -> SAStats:
+    """LRU-cached ``gating_stats_reference`` (see there for the math)."""
+    return _cached_gating_stats(M, K, N, saw, weight_load_cycles)
+
+
+def set_gating_cache_size(maxsize: int | None) -> int | None:
+    """Resize the ``gating_stats`` LRU (dropping its contents); returns
+    the previous maxsize. ``None`` means unbounded, ``0`` disables
+    caching entirely. Huge randomized sweeps can bound their footprint
+    with a small cache — correctness never depends on cache state
+    (``gating_stats_reference`` / ``gating_stats_batch_reference`` are
+    the cache-free oracles the property tests pin against)."""
+    global _cached_gating_stats
+    prev = _cached_gating_stats.cache_info().maxsize
+    _cached_gating_stats = _lru_cache(maxsize=maxsize)(
+        gating_stats_reference)
+    return prev
+
+
+def gating_cache_info():
+    """``functools.lru_cache`` statistics of the scalar closed form."""
+    return _cached_gating_stats.cache_info()
 
 
 @dataclass(frozen=True)
@@ -158,6 +206,90 @@ def gating_stats_batch(M, K, N, saw,
         frac_off=off / total,
         wake_events=n_tiles,
     )
+
+
+def gating_stats_batch_reference(M, K, N, saw,
+                                 weight_load_cycles=None) -> SAStatsBatch:
+    """Loop-of-scalars oracle for the batch implementations: calls the
+    *uncached* closed form per element, so equivalence tests depend on
+    neither vectorization nor LRU state."""
+    M, K, N, saw_a = np.broadcast_arrays(
+        np.asarray(M, np.int64), np.asarray(K, np.int64),
+        np.asarray(N, np.int64), np.asarray(saw, np.int64))
+    wlc = np.broadcast_to(
+        np.asarray(-1 if weight_load_cycles is None else weight_load_cycles,
+                   np.int64), M.shape)
+    stats = [gating_stats_reference(
+        int(m), int(k), int(n), int(s),
+        None if w < 0 else int(w))
+        for m, k, n, s, w in zip(M.ravel(), K.ravel(), N.ravel(),
+                                 saw_a.ravel(), wlc.ravel())]
+
+    def col(attr, dtype=np.float64):
+        return np.array([getattr(s, attr) for s in stats],
+                        dtype).reshape(M.shape)
+
+    return SAStatsBatch(
+        duration_cycles=col("duration_cycles"),
+        frac_on=col("frac_on"), frac_w_on=col("frac_w_on"),
+        frac_off=col("frac_off"),
+        wake_events=col("wake_events", np.int64))
+
+
+def gating_stats_batch_xp(M, K, N, saw, weight_load_cycles=None, *,
+                          xp=np) -> dict:
+    """Backend-neutral ``gating_stats_batch``: the same closed-form
+    4-category ragged-tile math in pure float64 ``xp`` ops.
+
+    Every input may be a traced (jax) array — including ``saw``, which
+    is what lets the jitted sweep kernel carry SA width as a knob axis.
+    All intermediate tile counts and PE-cycle totals are exact integers
+    in float64 (they stay far below 2**53), so the results are bitwise
+    identical to the int64 ``gating_stats_batch`` host path. Degenerate
+    rows (K or N zero — never produced by real traces) yield zeros
+    instead of dividing by zero, so masked sentinel entries are safe
+    under ``xp.where``.
+
+    Returns a plain dict (a jax pytree): ``duration_cycles``,
+    ``frac_on``, ``frac_w_on``, ``frac_off``, ``wake_events``.
+    """
+    f8 = xp.float64
+    M = xp.asarray(M, f8)
+    K = xp.asarray(K, f8)
+    N = xp.asarray(N, f8)
+    saw = xp.asarray(saw, f8)
+    wlc = saw if weight_load_cycles is None \
+        else xp.asarray(weight_load_cycles, f8)
+    # ceil(K/saw) on exact float64 integers: the quotient is correctly
+    # rounded and 1/saw >= 2**-53 away from the next integer, so floor
+    # can never land on the wrong side
+    kt = xp.floor((K + saw - 1.0) / saw)
+    nt = xp.floor((N + saw - 1.0) / saw)
+    k_last = K - (kt - 1.0) * saw
+    n_last = N - (nt - 1.0) * saw
+    cyc = (M + 2.0 * saw - 1.0) + wlc
+    on_per_live = xp.minimum(M, cyc)
+    won_per_live = xp.maximum(0.0, cyc - M)
+    live_total = ((kt - 1.0) * (nt - 1.0) * saw * saw
+                  + (kt - 1.0) * saw * n_last
+                  + (nt - 1.0) * k_last * saw
+                  + k_last * n_last)
+    n_tiles = kt * nt
+    on = live_total * on_per_live
+    w_on = live_total * won_per_live
+    duration = n_tiles * cyc
+    total = saw * saw * duration
+    off = total - on - w_on
+    # total is an exact integer >= 1 for all valid shapes, so the guard
+    # only rescues degenerate rows (it never changes a real quotient)
+    denom = xp.maximum(total, 1.0)
+    return {
+        "duration_cycles": duration,
+        "frac_on": on / denom,
+        "frac_w_on": w_on / denom,
+        "frac_off": off / denom,
+        "wake_events": n_tiles,
+    }
 
 
 def spatial_efficiency(M: int, K: int, N: int, saw: int) -> float:

@@ -25,7 +25,6 @@ then policy, then knob index (both paths, byte-identical ordering).
 """
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Iterable, Optional, Sequence
 
 from repro.core.hw import NPUSpec, get_npu
@@ -46,6 +45,7 @@ def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
         "leak_off_logic": knobs.leak_off_logic,
         "leak_sram_sleep": knobs.leak_sram_sleep,
         "leak_sram_off": knobs.leak_sram_off,
+        "sa_width": knobs.sa_width,
         "runtime_s": rep.runtime_s,
         "total_j": rep.total_j,
         "static_total_j": sum(rep.static_j.values()),
@@ -82,36 +82,21 @@ def sweep(workloads: Sequence[Workload] | Workload,
 def knob_product(delay_scale: Sequence[float] = (1.0,),
                  leak_off_logic: Sequence[Optional[float]] = (None,),
                  leak_sram_sleep: Sequence[Optional[float]] = (None,),
-                 leak_sram_off: Sequence[Optional[float]] = (None,)) \
+                 leak_sram_off: Sequence[Optional[float]] = (None,),
+                 sa_width: Sequence[Optional[int]] = (None,)) \
         -> list[PolicyKnobs]:
-    """Cross product of the four sensitivity knobs (paper §6.5) into a
-    flat knob grid, delay-major ordering (delay_scale outermost,
-    leak_sram_off innermost). ``None`` leaves a knob at the per-NPU
-    Table 3 default."""
+    """Cross product of the §6.5 sensitivity knobs into a flat knob
+    grid: ``sa_width`` outermost, then delay-major as before
+    (``delay_scale``, ``leak_off_logic``, ``leak_sram_sleep``,
+    ``leak_sram_off`` innermost). ``None`` leaves a knob at the per-NPU
+    Table 3 default (``sa_width=None`` → the generation's native
+    width)."""
     return [PolicyKnobs(delay_scale=d, leak_off_logic=lo,
-                        leak_sram_sleep=ls, leak_sram_off=lf)
-            for d in delay_scale for lo in leak_off_logic
-            for ls in leak_sram_sleep for lf in leak_sram_off]
-
-
-# SA-width variant specs memoized by (base spec identity, width): the
-# per-(stack, NPU) derived caches (_batch_ctx, _backend_data) are keyed
-# by spec identity, so repeated sweep_grid calls must hand back the SAME
-# variant object or every call would re-derive and re-transfer its
-# arrays (and grow the stack's cache without bound). The value keeps a
-# strong ref to the base spec so its id cannot be reused.
-_SAW_VARIANTS: dict[tuple[int, int], tuple[NPUSpec, NPUSpec]] = {}
-
-
-def _saw_variant(base: NPUSpec, width: int) -> NPUSpec:
-    if width == base.sa_width:
-        return base
-    hit = _SAW_VARIANTS.get((id(base), width))
-    if hit is not None and hit[0] is base:
-        return hit[1]
-    var = replace(base, name=f"{base.name}/saw{width}", sa_width=width)
-    _SAW_VARIANTS[(id(base), width)] = (base, var)
-    return var
+                        leak_sram_sleep=ls, leak_sram_off=lf,
+                        sa_width=sw)
+            for sw in sa_width for d in delay_scale
+            for lo in leak_off_logic for ls in leak_sram_sleep
+            for lf in leak_sram_off]
 
 
 def sweep_grid(workloads: Sequence[Workload] | Workload,
@@ -121,37 +106,39 @@ def sweep_grid(workloads: Sequence[Workload] | Workload,
                leak_off_logic: Sequence[Optional[float]] = (None,),
                leak_sram_sleep: Sequence[Optional[float]] = (None,),
                leak_sram_off: Sequence[Optional[float]] = (None,),
-               sa_width: Optional[Sequence[int]] = None,
+               sa_width: Sequence[Optional[int]] = (None,),
                backend: Optional[str] = None, jax_mesh=None,
                as_records: bool = True):
     """Fine-grid design-space sweep: the §6.5 sensitivity axes crossed
     into one ``evaluate_batch`` call (CompPow-style component × knob
     exploration at 100k-cell scale).
 
-    The knob axes (``delay_scale × leak_off_logic × leak_sram_sleep ×
-    leak_sram_off``) become the knob grid via ``knob_product``;
-    ``sa_width`` optionally widens the NPU axis with per-generation SA
-    width variants — each listed width that differs from a generation's
-    native width adds a ``replace()``d spec named ``{npu}/saw{width}``
-    (native widths keep the registry spec; variants are memoized per
-    (base, width), so the identity-keyed derived-trace caches stay warm
-    across repeated calls).
+    All five axes (``sa_width × delay_scale × leak_off_logic ×
+    leak_sram_sleep × leak_sram_off``) become the knob grid via
+    ``knob_product`` — since ISSUE 5, ``sa_width`` is a real knob
+    (``PolicyKnobs.sa_width``) rather than a set of renamed NPU
+    variants: records carry it in their ``sa_width`` column with the
+    NPU name untouched, and the jax kernel traces it, so a width axis
+    costs extra vmapped (width, delay) pairs, not extra compiled
+    programs.
 
     On the jax backend the whole grid runs as one jitted program that
     compiles once and is reused across every NPU generation (and across
-    repeated calls with the same stack/grid shape); ``jax_mesh``
-    optionally shards the stacked workload axis over the devices of a
-    ``parallel.jax_compat`` mesh. Returns flat records, or the
+    repeated calls with the same stack/grid shape). ``jax_mesh``
+    selects the multi-device path: a ``("wl",)`` mesh shards the
+    stacked op axis under GSPMD, while a mesh with a ``"knob"`` axis
+    (optionally ``("wl", "knob")``) runs the explicit ``shard_map``
+    program that shards the knob/pair axes too — the right shape for
+    small-suite, huge-grid sweeps. Returns flat records, or the
     ``BatchResult`` cube when ``as_records=False``.
     """
     if isinstance(workloads, Workload):
         workloads = [workloads]
+    if sa_width is None:  # the pre-ISSUE-5 "no width axis" spelling
+        sa_width = (None,)
     knob_grid = knob_product(delay_scale, leak_off_logic,
-                             leak_sram_sleep, leak_sram_off)
+                             leak_sram_sleep, leak_sram_off, sa_width)
     npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
-    if sa_width is not None:
-        npu_specs = [_saw_variant(n, w)
-                     for n in npu_specs for w in sa_width]
     res: BatchResult = evaluate_batch(
         workloads, npu_specs, tuple(policies), tuple(knob_grid),
         backend=backend, jax_mesh=jax_mesh)
@@ -209,27 +196,43 @@ def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     A record's baseline is the ``baseline``-policy row of the same
     (workload, npu, knob_idx) cell. When that exact cell is missing,
     the un-gated ``NoPG`` baseline may fall back to the single knob
-    point it was evaluated at — e.g. a knob grid that only evaluates the
-    baseline at knob 0, which is sound because NoPG never gates and so
-    no knob can change its energy. Gating baselines get no such
-    fallback (their energy IS knob-sensitive; a knob-mismatched
-    denominator would be silently wrong). Baseline rows get savings
-    0.0; cells with no resolvable baseline get savings None.
+    point it was evaluated at — e.g. a knob grid that only evaluates
+    the baseline at knob 0, which is sound because NoPG never gates
+    and so no *gating* knob can change its energy. ``sa_width`` is the
+    exception (it moves service times and therefore NoPG energy too),
+    so the fallback additionally requires the record's ``sa_width`` to
+    match the baseline row's — a width-mismatched denominator would be
+    silently wrong, like any gating baseline. Gating baselines get no
+    fallback at all. Baseline rows get savings 0.0; cells with no
+    resolvable baseline get savings None.
     """
+    def eff_width(r):
+        """Record's effective SA width: ``None`` (native) and the
+        explicitly spelled native width are the same configuration."""
+        w = r.get("sa_width")
+        if w is not None:
+            return w
+        try:
+            return get_npu(r["npu"]).sa_width
+        except KeyError:  # ad-hoc spec name: compare the raw value
+            return None
+
     base: dict[tuple, float] = {}
-    per_cell: dict[tuple, list[float]] = {}
+    per_cell: dict[tuple, list[tuple]] = {}
     for r in records:
         if r["policy"] == baseline:
             base[(r["workload"], r["npu"], r["knob_idx"])] = r["total_j"]
             per_cell.setdefault((r["workload"], r["npu"]), []) \
-                .append(r["total_j"])
+                .append((r["total_j"], eff_width(r)))
     fallback = {k: v[0] for k, v in per_cell.items()
                 if len(v) == 1} if baseline == "NoPG" else {}
     out = []
     for r in records:
         b = base.get((r["workload"], r["npu"], r["knob_idx"]))
         if b is None:
-            b = fallback.get((r["workload"], r["npu"]))
+            fb = fallback.get((r["workload"], r["npu"]))
+            if fb is not None and fb[1] == eff_width(r):
+                b = fb[0]
         r = dict(r)
         r["savings"] = None if b is None else 1.0 - r["total_j"] / b
         out.append(r)

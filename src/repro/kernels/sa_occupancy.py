@@ -1,0 +1,91 @@
+"""SA PE-occupancy closed form as a Pallas kernel (paper §4.1, Fig 10).
+
+The sweep plane needs per-op PE-state occupancy fractions for every
+matmul in the trace; ``core.sa_gating.gating_stats_batch_xp`` is the
+closed-form 4-category ragged-tile math. This kernel evaluates that
+exact math tile-by-tile over the op stream so the occupancy pass can
+run on-device next to ``gated_matmul`` — the ROADMAP's "the whole jax
+sweep program stays on-device" step. It shares the ``prefix_on_bitmap``
+semantics with ``gated_matmul``: the closed form *is* the analytic
+integral of the prefix row/col bitmaps plus the diagonal PE_on front,
+so the two kernels agree on which PEs a ragged tile leaves dark.
+
+``saw`` (the SA width) enters as a traced scalar operand — the sweep
+kernel vmaps over unique (saw, delay-scale) pairs — and the weight-load
+cycle count rides in the same scalar params vector with a ``-1``
+"default to saw" sentinel, so one compiled kernel serves the whole knob
+axis.
+
+On this CPU container the kernel runs with ``interpret=True`` (same
+convention as the other kernels in this package); on a real TPU the
+1-D op stream should be fed in lane-aligned (block multiple of 128)
+blocks, which the default block size already is.
+
+The jnp oracle is ``kernels.ref.ref_sa_occupancy`` and the selection
+between oracle and kernel is a backend-contract switch
+(``core.backend.set_sa_occupancy_impl``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.sa_gating import gating_stats_batch_xp
+
+STAT_KEYS = ("duration_cycles", "frac_on", "frac_w_on", "frac_off",
+             "wake_events")
+
+
+def _kernel(params_ref, m_ref, k_ref, n_ref, dur_ref, on_ref, won_ref,
+            off_ref, wake_ref):
+    saw = params_ref[0]
+    wlc_raw = params_ref[1]
+    wlc = jnp.where(wlc_raw < 0.0, saw, wlc_raw)
+    st = gating_stats_batch_xp(m_ref[...], k_ref[...], n_ref[...], saw,
+                               wlc, xp=jnp)
+    dur_ref[...] = st["duration_cycles"]
+    on_ref[...] = st["frac_on"]
+    won_ref[...] = st["frac_w_on"]
+    off_ref[...] = st["frac_off"]
+    wake_ref[...] = st["wake_events"]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def sa_occupancy_p(mm_m: jax.Array, mm_k: jax.Array, mm_n: jax.Array,
+                   saw: jax.Array, weight_load_cycles=None, *,
+                   block: int = 512, interpret: bool = True) -> dict:
+    """Per-op SA occupancy stats for ``[M,K]x[K,N]`` matmul streams.
+
+    ``mm_m/mm_k/mm_n``: (n,) matmul dims (float64 exact integers);
+    ``saw``: scalar SA width (may be traced);
+    ``weight_load_cycles``: optional scalar override (``None`` → saw).
+    Returns the ``gating_stats_batch_xp`` dict of (n,) float64 arrays.
+    """
+    n = mm_m.shape[0]
+    f8 = jnp.float64
+    wlc = jnp.asarray(-1.0 if weight_load_cycles is None
+                      else weight_load_cycles, f8)
+    params = jnp.stack([jnp.asarray(saw, f8), wlc])
+    if n == 0:
+        z = jnp.zeros(0, f8)
+        return dict(zip(STAT_KEYS, (z, z, z, z, z)))
+    pad = (-n) % block
+    # pad with benign 1x1x1 tiles; sliced away below
+    dims = [jnp.pad(jnp.asarray(a, f8), (0, pad), constant_values=1.0)
+            for a in (mm_m, mm_k, mm_n)]
+    npad = n + pad
+    grid = (npad // block,)
+    shp = jax.ShapeDtypeStruct((npad,), f8)
+    blk = pl.BlockSpec((block,), lambda i: (i,))
+    outs = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), blk, blk, blk],
+        out_specs=[blk] * 5,
+        out_shape=[shp] * 5,
+        interpret=interpret,
+    )(params, *dims)
+    return dict(zip(STAT_KEYS, (o[:n] for o in outs)))

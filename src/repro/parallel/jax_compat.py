@@ -106,3 +106,24 @@ def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=check)
+
+
+def sweep_mesh(wl: int = 1, knob: int = 1, *, devices=None):
+    """Mesh for the multi-device sweep plane (ISSUE 5), axes named the
+    way ``policies._evaluate_batch_backend`` dispatches on them:
+
+    * ``wl``   — shards the stacked per-op axis (GSPMD when it is the
+      only axis; inside the ``shard_map`` program otherwise);
+    * ``knob`` — presence selects the explicit ``shard_map`` path and
+      shards the unique-width / (width, delay)-pair / knob axes.
+
+    So ``sweep_mesh(wl=8)`` is the pure-GSPMD data-sharding mesh (no
+    knob axis is added), while any ``knob >= 1`` request — including
+    the degenerate ``(wl=1, knob=1)`` the in-process tests use to
+    cover the shard_map program on one device — yields a
+    ``("wl", "knob")`` mesh and the explicit SPMD path.
+    ``wl * knob`` must not exceed the available device count.
+    """
+    if knob == 1 and wl > 1:
+        return make_mesh((wl,), ("wl",), devices=devices)
+    return make_mesh((wl, knob), ("wl", "knob"), devices=devices)

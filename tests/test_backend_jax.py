@@ -174,27 +174,69 @@ def test_sweep_grid_cross_product_equivalence():
 
 
 def test_sweep_grid_sa_width_axis():
-    """SA-width variants widen the NPU axis: replaced specs get
-    ``/saw{width}`` names, native widths keep the registry spec, and a
-    non-native width genuinely changes the SA numbers."""
+    """``sa_width`` is a real knob axis (ISSUE 5): the NPU axis stays
+    untouched, records carry the width in their ``sa_width`` column,
+    the traced-saw jax kernel matches a direct evaluation on a
+    width-replaced spec, and a non-native width genuinely changes the
+    SA numbers."""
     _require_x64()
     wl = paper_suite()[4]  # prefill, SA-heavy
     res = sweep_grid(wl, ("NPU-D",), ("NoPG", "ReGate-HW"),
-                     sa_width=(128, 256), backend="jax",
+                     sa_width=(None, 256), backend="jax",
                      as_records=False)
-    assert tuple(n.name for n in res.npus) == ("NPU-D", "NPU-D/saw256")
+    assert tuple(n.name for n in res.npus) == ("NPU-D",)
     recs = res.records()
-    assert {r["npu"] for r in recs} == {"NPU-D", "NPU-D/saw256"}
-    native = [r for r in recs if r["npu"] == "NPU-D"
+    assert {r["npu"] for r in recs} == {"NPU-D"}
+    assert {r["sa_width"] for r in recs} == {None, 256}
+    native = [r for r in recs if r["sa_width"] is None
               and r["policy"] == "ReGate-HW"][0]
-    wide = [r for r in recs if r["npu"] == "NPU-D/saw256"
+    wide = [r for r in recs if r["sa_width"] == 256
             and r["policy"] == "ReGate-HW"][0]
     assert native["runtime_s"] != wide["runtime_s"]
-    # per-variant cells equal a direct evaluation on the replaced spec
-    from dataclasses import replace
-    spec = replace(get_npu("NPU-D"), name="NPU-D/saw256", sa_width=256)
-    want = evaluate(wl, spec, "ReGate-HW")
+    # per-width cells equal a direct scalar evaluation with the knob
+    want = evaluate(wl, "NPU-D", "ReGate-HW", PolicyKnobs(sa_width=256))
     assert _rel(wide["total_j"], want.total_j) <= RTOL
+    # ... and a direct evaluation on the width-replaced spec (wider SA
+    # also means higher peak FLOP/s — the derived sa_flops moved too)
+    from repro.core.hw import with_sa_width
+    spec = with_sa_width(get_npu("NPU-D"), 256)
+    assert spec.sa_flops > get_npu("NPU-D").sa_flops
+    want2 = evaluate(wl, spec, "ReGate-HW")
+    assert _rel(wide["total_j"], want2.total_j) <= RTOL
+
+
+def test_sa_width_knob_traced_vs_loop_oracle():
+    """A width × delay grid through the jax kernel against the
+    per-cell loop oracle (``sweep_reference``), which resolves widths
+    through memoized ``hw.with_sa_width`` variant specs."""
+    _require_x64()
+    from repro.core.sweep import knob_product
+    wls = paper_suite()[:2]
+    grid = knob_product(delay_scale=(1.0, 3.0),
+                        sa_width=(None, 64, 512))
+    ref = sweep_reference(wls, ("NPU-A", "NPU-E"), POLICIES, grid)
+    got = sweep(wls, ("NPU-A", "NPU-E"), POLICIES, grid, backend="jax")
+    _assert_records_match(ref, got)
+
+
+def test_pallas_occupancy_inside_sweep():
+    """The Pallas ``sa_occupancy`` kernel, selected through the backend
+    contract, reproduces the numpy sweep record-for-record (the
+    ROADMAP's "whole jax sweep program stays on-device" step)."""
+    _require_x64()
+    from repro.core import backend as backend_mod
+    from repro.core.sweep import knob_product
+    wl = paper_suite()[4]
+    grid = knob_product(delay_scale=(1.0, 2.0), sa_width=(None, 256))
+    ref = sweep(wl, ("NPU-D",), POLICIES, grid, backend="numpy")
+    prev = backend_mod.set_sa_occupancy_impl("pallas")
+    try:
+        got = sweep(wl, ("NPU-D",), POLICIES, grid, backend="jax")
+    finally:
+        backend_mod.set_sa_occupancy_impl(prev)
+    _assert_records_match(ref, got)
+    with pytest.raises(KeyError):
+        backend_mod.set_sa_occupancy_impl("nope")
 
 
 # --------------------------------------------------------------------------
@@ -217,6 +259,30 @@ def test_jax_mesh_requires_jax_backend():
     with pytest.raises(ValueError, match="jax_mesh"):
         evaluate_batch(paper_suite()[:1], backend="numpy",
                        jax_mesh=object())
+
+
+@pytest.mark.parametrize("axes", [("knob",), ("wl", "knob")])
+def test_shard_map_mesh_matches_numpy(axes):
+    """A mesh with a ``"knob"`` axis selects the explicit shard_map
+    program (op columns psum-completed over ``wl``, pairs + knobs
+    sharded over ``knob``); every topology must match the numpy oracle
+    record-for-record — including knob/pair counts that do not divide
+    the axis size (the padding path)."""
+    _require_x64()
+    from repro.core.sweep import knob_product
+    from repro.parallel import jax_compat
+    n_dev = len(jax.devices())
+    shape = (n_dev,) if axes == ("knob",) else (1, n_dev)
+    mesh = jax_compat.make_mesh(shape, axes)
+    wls = paper_suite()[:3]
+    grid = knob_product(delay_scale=(0.5, 1.0, 2.0),
+                        leak_off_logic=(0.03, 0.2),
+                        sa_width=(None, 256))
+    ref = sweep(wls, ("NPU-B", "NPU-E"), POLICIES, grid,
+                backend="numpy")
+    got = evaluate_batch(wls, ("NPU-B", "NPU-E"), POLICIES, grid,
+                         backend="jax", jax_mesh=mesh).records()
+    _assert_records_match(ref, got)
 
 
 # --------------------------------------------------------------------------

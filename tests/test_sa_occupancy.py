@@ -1,0 +1,140 @@
+"""Backend-neutral SA occupancy math (ISSUE 5).
+
+``gating_stats_batch_xp`` is the closed-form 4-category ragged-tile
+math over a pluggable ``xp`` namespace — the traced heart of the
+on-device sweep. These property tests pin it (and the uncached batch
+reference) against the scalar closed form and the exact cycle-level
+PE-grid simulation on every shape family the sweep can produce:
+ragged-K, ragged-N, ragged-both tiles, M < SAW streams, degenerate
+saw=1 arrays, and zero-op (empty) traces. Also: the ``gating_stats``
+LRU is resizable and the reference entry points bypass it entirely.
+"""
+import math
+
+import numpy as np
+
+from repro.core.sa_gating import (gating_cache_info, gating_stats,
+                                  gating_stats_batch,
+                                  gating_stats_batch_reference,
+                                  gating_stats_batch_xp,
+                                  gating_stats_reference,
+                                  set_gating_cache_size,
+                                  simulate_pe_grid)
+
+RTOL = 1e-12
+
+
+def _assert_xp_matches_scalar(Ms, Ks, Ns, saw, wlc=None):
+    got = gating_stats_batch_xp(Ms, Ks, Ns, saw, wlc, xp=np)
+    ref = gating_stats_batch_reference(Ms, Ks, Ns, saw, wlc)
+    np.testing.assert_array_equal(got["duration_cycles"],
+                                  ref.duration_cycles)
+    np.testing.assert_array_equal(got["wake_events"], ref.wake_events)
+    for f in ("frac_on", "frac_w_on", "frac_off"):
+        np.testing.assert_array_equal(got[f], getattr(ref, f), f)
+
+
+def test_xp_matches_scalar_ragged_tile_families():
+    """Ragged-K / ragged-N / ragged-both / M<SAW, per family."""
+    saw = 128
+    cases = {
+        "full": (4096, 256, 256),
+        "ragged_k": (4096, 100, 256),
+        "ragged_n": (4096, 256, 100),
+        "ragged_both": (4096, 100, 100),
+        "m_under": (8, 256, 256),
+        "m_under_ragged": (3, 77, 33),
+        "single_pe": (1, 1, 1),
+    }
+    Ms, Ks, Ns = (np.array([c[i] for c in cases.values()])
+                  for i in range(3))
+    _assert_xp_matches_scalar(Ms, Ks, Ns, saw)
+    _assert_xp_matches_scalar(Ms, Ks, Ns, saw, wlc=0)
+
+
+def test_xp_matches_scalar_randomized_all_widths():
+    rng = np.random.default_rng(7)
+    Ms = np.concatenate([rng.integers(1, 5000, 300), [1, 131072]])
+    Ks = np.concatenate([rng.integers(1, 3000, 300), [1, 16384]])
+    Ns = np.concatenate([rng.integers(1, 3000, 300), [1, 8016]])
+    for saw in (1, 4, 8, 128, 256):
+        _assert_xp_matches_scalar(Ms, Ks, Ns, saw)
+        # int64 vectorized batch agrees bitwise too
+        b = gating_stats_batch(Ms, Ks, Ns, saw)
+        x = gating_stats_batch_xp(Ms, Ks, Ns, saw)
+        for f in ("frac_on", "frac_w_on", "frac_off", "duration_cycles"):
+            np.testing.assert_array_equal(x[f], getattr(b, f), (saw, f))
+
+
+def test_xp_saw_one_degenerate_width():
+    """saw=1: every live 'tile' is a single PE; closed form must stay
+    finite and exact."""
+    Ms = np.array([1, 2, 17, 1000])
+    Ks = np.array([1, 3, 5, 7])
+    Ns = np.array([1, 2, 9, 11])
+    got = gating_stats_batch_xp(Ms, Ks, Ns, 1, xp=np)
+    _assert_xp_matches_scalar(Ms, Ks, Ns, 1)
+    # a 1-wide SA has no dead rows/columns: everything is live
+    np.testing.assert_allclose(got["frac_on"] + got["frac_w_on"],
+                               np.ones(4), rtol=RTOL)
+
+
+def test_xp_zero_op_trace_empty_arrays():
+    """Zero-op traces reach the kernel as empty columns."""
+    z = np.zeros(0)
+    got = gating_stats_batch_xp(z, z, z, 128, xp=np)
+    for f in ("frac_on", "frac_w_on", "frac_off", "duration_cycles",
+              "wake_events"):
+        assert got[f].shape == (0,)
+
+
+def test_xp_traced_saw_array_broadcast():
+    """saw may itself be an array (the vmapped pair axis feeds a 0-d
+    traced scalar; numpy exercises the same broadcast contract)."""
+    Ms = np.array([64, 512]); Ks = np.array([30, 200])
+    Ns = np.array([40, 100])
+    for saw in (np.float64(128.0), np.array(32.0)):
+        got = gating_stats_batch_xp(Ms, Ks, Ns, saw, xp=np)
+        _assert_xp_matches_scalar(Ms, Ks, Ns, int(saw))
+        assert got["frac_on"].shape == (2,)
+
+
+def test_xp_matches_cycle_simulation_single_tile():
+    """Against the exact PE_on propagation sim (one weight tile,
+    weight_load_cycles=0), including M<SAW and ragged-both."""
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        saw = int(rng.choice([2, 4, 8, 12]))
+        M = int(rng.integers(1, 3 * saw))
+        K = int(rng.integers(1, saw + 1))
+        N = int(rng.integers(1, saw + 1))
+        sim = simulate_pe_grid(M, K, N, saw)
+        got = gating_stats_batch_xp([M], [K], [N], saw, 0, xp=np)
+        tot = sim["total"]
+        assert math.isclose(got["frac_on"][0], sim["on"] / tot,
+                            rel_tol=1e-9, abs_tol=1e-15)
+        assert math.isclose(got["frac_w_on"][0], sim["w_on"] / tot,
+                            rel_tol=1e-9, abs_tol=1e-15)
+        assert math.isclose(got["frac_off"][0], sim["off"] / tot,
+                            rel_tol=1e-9, abs_tol=1e-15)
+
+
+def test_gating_cache_resizable_and_reference_uncached():
+    prev = set_gating_cache_size(4)
+    try:
+        assert gating_cache_info().maxsize == 4
+        for m in range(1, 9):
+            gating_stats(m, 64, 64, 128)
+        assert gating_cache_info().currsize <= 4
+        # the reference entry points never touch the cache
+        before = gating_cache_info()
+        st = gating_stats_reference(12345, 67, 89, 128)
+        ref = gating_stats_batch_reference([12345], [67], [89], 128)
+        after = gating_cache_info()
+        assert (before.hits, before.misses) == (after.hits, after.misses)
+        assert ref.frac_on[0] == st.frac_on
+        # cached and uncached agree, of course
+        assert gating_stats(12345, 67, 89, 128) == st
+    finally:
+        set_gating_cache_size(prev)
+    assert gating_cache_info().maxsize == prev

@@ -361,3 +361,32 @@ def test_single_workload_and_spec_npus():
     assert _rel(recs[0]["total_j"], want.total_j) <= RTOL
     assert _rel(recs[0]["setpm_per_1k_cycles"],
                 want.setpm_per_1k_cycles(get_npu("NPU-D"))) <= RTOL
+
+
+def test_with_savings_fallback_is_sa_width_aware():
+    """The single-knob NoPG fallback must NOT cross SA widths: unlike
+    the gating knobs, ``sa_width`` moves NoPG's service times and
+    energy, so a width-mismatched denominator would be silently wrong
+    (ISSUE 5 regression). Matching-width cells keep the fallback;
+    mismatched-width cells get savings None."""
+    from repro.core.sweep import knob_product
+    wl = paper_suite()[4]
+    grid = knob_product(delay_scale=(1.0, 2.0), sa_width=(None, 256))
+    full = sweep(wl, policies=("NoPG", "ReGate-HW"), knob_grid=grid)
+    # NoPG really IS width-sensitive (the premise of this test)
+    nopg = [r for r in full if r["policy"] == "NoPG"]
+    assert not math.isclose(nopg[0]["total_j"], nopg[-1]["total_j"],
+                            rel_tol=1e-6)
+    # keep NoPG only at knob 0 (sa_width=None)
+    pruned = [r for r in full
+              if r["policy"] != "NoPG" or r["knob_idx"] == 0]
+    out = with_savings(pruned)
+    base = nopg[0]["total_j"]
+    for r in out:
+        if r["policy"] == "NoPG":
+            assert r["savings"] == 0.0
+        elif r["sa_width"] is None:  # width matches the baseline row
+            assert math.isclose(r["savings"], 1.0 - r["total_j"] / base,
+                                rel_tol=RTOL)
+        else:  # width-mismatched: no silently-wrong number
+            assert r["savings"] is None
