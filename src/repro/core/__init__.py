@@ -16,6 +16,12 @@ backend       — pluggable array substrate for the batched plane: numpy
 carbon        — operational/embodied carbon (Figs 24-25)
 slo           — SLO-constrained config sweep (Fig 2)
 hlo/roofline  — compiled-HLO cost extraction for the dry-run
+ici_topology  — ring / 2-D-mesh collective schedules lowered onto the
+                op-level trace (per-step ICI busy/idle timelines)
+perturb       — seeded fault injection + adversarial perturbation
+                (jitter plane): burst compression, link degradation,
+                stragglers, idle fragmentation, clock jitter; the
+                ISA differential fuzz harness
 """
 from repro.core.backend import (default_backend, get_backend,
                                 set_default_backend)
@@ -24,10 +30,11 @@ from repro.core.opgen import compile_trace, stack_traces
 from repro.core.policies import POLICIES, evaluate, evaluate_all, \
     evaluate_batch, evaluate_reference, savings_vs_nopg
 from repro.core.sweep import knob_product, sweep, sweep_grid, \
-    sweep_reference
+    sweep_reference, sweep_robustness
 
 __all__ = ["NPUS", "TARGET", "get_npu", "POLICIES", "compile_trace",
            "stack_traces", "evaluate", "evaluate_all", "evaluate_batch",
            "evaluate_reference", "savings_vs_nopg", "sweep",
-           "sweep_grid", "sweep_reference", "knob_product",
-           "get_backend", "set_default_backend", "default_backend"]
+           "sweep_grid", "sweep_reference", "sweep_robustness",
+           "knob_product", "get_backend", "set_default_backend",
+           "default_backend"]

@@ -293,6 +293,24 @@ class EventTimeline(VLIWTimeline):
         return self._finish(t)
 
 
+def merge_events(events: Iterable[tuple[int, dict[str, Instr]]]) \
+        -> list[tuple[int, dict[str, Instr]]]:
+    """Canonicalize a raw event list into a valid sparse program: sort by
+    cycle and merge same-cycle events into one bundle.
+
+    On a slot collision (two instructions for the same unit — or two
+    misc-slot setpms — at the same cycle) the later entry wins, the VLIW
+    rule for double-written slots. The result satisfies ``EventTimeline``'s
+    strictly-increasing contract, so pathological generators (the
+    ``repro.core.perturb`` fuzz harness) can emit colliding raw streams
+    and still produce a well-formed program.
+    """
+    merged: dict[int, dict[str, Instr]] = {}
+    for cycle, bundle in events:
+        merged.setdefault(int(cycle), {}).update(bundle)
+    return sorted(merged.items())
+
+
 def expand_events(events: Iterable[tuple[int, dict[str, Instr]]],
                   horizon: Optional[int] = None) \
         -> list[dict[str, Instr]]:

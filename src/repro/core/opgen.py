@@ -112,6 +112,35 @@ def compile_trace(wl: Workload) -> TraceArrays:
     return tr
 
 
+def _validate_trace(wl: Workload, cols: dict[str, np.ndarray],
+                    has_mm: np.ndarray, dims: np.ndarray) -> None:
+    """Reject malformed op streams before they reach the policy engine.
+
+    Negative or non-finite service-time carriers (flops / bytes /
+    counts) would silently corrupt durations, idle gaps, and energy
+    totals downstream — raise a ``ValueError`` naming the workload, op,
+    and field instead. Zero-dim matmuls are equally rejected (the SA
+    occupancy model divides by them).
+    """
+    for fld, a in cols.items():
+        bad = ~np.isfinite(a)
+        kind = "non-finite"
+        if not bad.any():
+            bad = a < 0
+            kind = "negative"
+        if bad.any():
+            i = int(np.flatnonzero(bad)[0])
+            raise ValueError(
+                f"workload {wl.name!r}: {kind} {fld}={a[i]!r} at op "
+                f"{i} ({wl.ops[i].name!r}) — would corrupt service "
+                f"times/energy silently")
+    if has_mm.any() and (dims[has_mm] < 1).any():
+        i = int(np.flatnonzero(has_mm & (dims < 1).any(axis=1))[0])
+        raise ValueError(
+            f"workload {wl.name!r}: matmul_dims must be >= 1, got "
+            f"{wl.ops[i].matmul_dims} at op {i} ({wl.ops[i].name!r})")
+
+
 def _compile_trace(wl: Workload) -> TraceArrays:
     ops = wl.ops
     n = len(ops)
@@ -120,14 +149,24 @@ def _compile_trace(wl: Workload) -> TraceArrays:
     dims = np.array([d if d is not None else (1, 1, 1) for d in mm],
                     np.int64).reshape(n, 3) if n else np.zeros((0, 3),
                                                                np.int64)
+    cols = {
+        "flops_sa": np.array([o.flops_sa for o in ops], np.float64),
+        "flops_vu": np.array([o.flops_vu for o in ops], np.float64),
+        "bytes_hbm": np.array([o.bytes_hbm for o in ops], np.float64),
+        "bytes_ici": np.array([o.bytes_ici for o in ops], np.float64),
+        "sram_demand": np.array([o.sram_demand for o in ops],
+                                np.float64),
+        "count": np.array([o.count for o in ops], np.float64),
+    }
+    _validate_trace(wl, cols, has_mm, dims)
     return TraceArrays(
         n_ops=n,
-        flops_sa=np.array([o.flops_sa for o in ops], np.float64),
-        flops_vu=np.array([o.flops_vu for o in ops], np.float64),
-        bytes_hbm=np.array([o.bytes_hbm for o in ops], np.float64),
-        bytes_ici=np.array([o.bytes_ici for o in ops], np.float64),
-        sram_demand=np.array([o.sram_demand for o in ops], np.float64),
-        count=np.array([o.count for o in ops], np.float64),
+        flops_sa=cols["flops_sa"],
+        flops_vu=cols["flops_vu"],
+        bytes_hbm=cols["bytes_hbm"],
+        bytes_ici=cols["bytes_ici"],
+        sram_demand=cols["sram_demand"],
+        count=cols["count"],
         collective=np.array([o.collective for o in ops], bool),
         has_mm=has_mm,
         mm_m=dims[:, 0], mm_k=dims[:, 1], mm_n=dims[:, 2],
@@ -196,6 +235,13 @@ def stack_traces(workloads) -> StackedTrace:
     if isinstance(workloads, Workload):
         workloads = [workloads]
     workloads = list(workloads)
+    for i, wl in enumerate(workloads):
+        if not isinstance(wl, Workload):
+            raise ValueError(
+                f"stack_traces expects Workload instances, got "
+                f"{type(wl).__name__} at index {i}")
+    # compile_trace validates each op stream (negative / non-finite
+    # carriers raise), so a malformed trace can never enter the stack
     traces = tuple(compile_trace(wl) for wl in workloads)
     # a key hit implies identity: the entry holds strong refs to exactly
     # the traces whose ids form its key, so those ids cannot be reused

@@ -96,6 +96,10 @@ class PolicyKnobs:
     leak_sram_off: Optional[float] = None
     delay_scale: float = 1.0  # scales wake-up delays and BETs
     sa_width: Optional[int] = None
+    # Scales ONLY the HW idle-detection window (paper default BET/3),
+    # leaving wake-up delays and BETs alone — the genuine detection-
+    # threshold axis for the jitter-plane robustness sweep.
+    window_scale: float = 1.0
 
 
 @dataclass
@@ -288,7 +292,8 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
         e, exposed, nw, sp, gs = _gated_idle_energy(
             gap, static_w[c], mode=pol.mode, bet_s=bet_s(pol.delay_key),
             delay_s=delay_s(pol.delay_key),
-            window_s=bet_s(pol.delay_key) * g.detection_window_frac,
+            window_s=bet_s(pol.delay_key) * g.detection_window_frac
+            * knobs.window_scale,
             leak=leak)
         static_j[c] += e
         overhead_local = exposed
@@ -317,7 +322,7 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
         gap_cy = npu.cycles(slack) / n_bursts
         bet_cy = g.bet["vu"] * knobs.delay_scale
         delay_cy = g.on_off_delay["vu"] * knobs.delay_scale
-        window_cy = bet_cy * g.detection_window_frac
+        window_cy = bet_cy * g.detection_window_frac * knobs.window_scale
         p = static_w["vu"]
         if pol.mode == "none":
             static_j["vu"] += p * slack * n
@@ -392,7 +397,7 @@ def evaluate_reference(wl: Workload, npu: NPUSpec | str = "NPU-D",
                     bet_s=bet_s(pol.delay_key),
                     delay_s=delay_s(pol.delay_key),
                     window_s=bet_s(pol.delay_key)
-                    * g.detection_window_frac,
+                    * g.detection_window_frac * knobs.window_scale,
                     leak=leak)
                 static_j[c] += e * n
                 ov = exposed * n
@@ -587,7 +592,7 @@ def evaluate(wl: Workload, npu: NPUSpec | str = "NPU-D",
         bet_s = g.bet.get(pol.delay_key, 0) * knobs.delay_scale / npu.freq_hz
         delay_s = g.on_off_delay.get(pol.delay_key, 0) * knobs.delay_scale \
             / npu.freq_hz
-        window_s = bet_s * g.detection_window_frac
+        window_s = bet_s * g.detection_window_frac * knobs.window_scale
 
         # merged cross-op idle gaps (each closed once, not per instance)
         gaps = _merged_gaps(active, np.where(active, 0.0, durn))
@@ -695,7 +700,7 @@ def _fine_grained_vu_vec(tm: dict, tr: TraceArrays, npu: NPUSpec,
     gap_cy = npu.cycles(slack) / n_bursts
     bet_cy = g.bet["vu"] * knobs.delay_scale
     delay_cy = g.on_off_delay["vu"] * knobs.delay_scale
-    window_cy = bet_cy * g.detection_window_frac
+    window_cy = bet_cy * g.detection_window_frac * knobs.window_scale
     psn = p * slack * n
     if pol.mode == "none":
         return {"static_j": float(psn.sum()), "overhead": 0.0,
@@ -807,20 +812,21 @@ class BatchResult:
                                      col(self.dynamic_j[c]))
                                     for c in COMPONENTS]
         knobs_meta = [(ki, kn.delay_scale, kn.leak_off_logic,
-                       kn.leak_sram_sleep, kn.leak_sram_off, kn.sa_width)
+                       kn.leak_sram_sleep, kn.leak_sram_off, kn.sa_width,
+                       kn.window_scale)
                       for ki, kn in enumerate(self.knob_grid)]
         recs = []
         i = 0
         for wname in self.workloads:
             for npu in self.npus:
                 for policy in self.policies:
-                    for ki, dsc, lol, lss, lso, saw in knobs_meta:
+                    for ki, dsc, lol, lss, lso, saw, wsc in knobs_meta:
                         rec = {
                             "workload": wname, "npu": npu.name,
                             "policy": policy, "knob_idx": ki,
                             "delay_scale": dsc, "leak_off_logic": lol,
                             "leak_sram_sleep": lss, "leak_sram_off": lso,
-                            "sa_width": saw,
+                            "sa_width": saw, "window_scale": wsc,
                             "runtime_s": cols[0][i], "total_j": cols[1][i],
                             "static_total_j": cols[2][i],
                             "dynamic_total_j": cols[3][i],
@@ -947,7 +953,7 @@ def _comp_cell(ctx: dict, c: str, pol: _CompPolicy, kp: dict) -> dict:
         leak = np.maximum(leak, g.leak_hbm_refresh)
     bet = g.bet.get(pol.delay_key, 0) * kp["dscale"] / ctx["freq"]
     delay = g.on_off_delay.get(pol.delay_key, 0) * kp["dscale"] / ctx["freq"]
-    window = bet * g.detection_window_frac
+    window = bet * g.detection_window_frac * kp["wscale"]
 
     static = np.zeros((W, K))
     overhead = np.zeros((W, K))
@@ -1057,7 +1063,7 @@ def _vu_fine_cell(ctx, pol, kp, leak, static, overhead, wakes, setpm,
     gap_cy = cc["gap_cy"]
     psn = cc["psn"][:, None]
     if pol.mode == "hw":
-        window_cy = bet_cy * g.detection_window_frac
+        window_cy = bet_cy * g.detection_window_frac * kp["wscale"]
         gm = gap_cy[:, None] > bet_cy[None, :]
         gf = np.maximum(0.0, 1.0 - window_cy[None, :]
                         * cc["inv_gap"][:, None])
@@ -1129,13 +1135,15 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
 
     The knob axis is factored: the O(n_ops)-sized work — occupancy,
     service times, gap merges, masked threshold merges — depends only
-    on ``(sa_width, delay_scale)``, and every leakage knob enters
-    *linearly after* the segmented reductions. So the heavy passes run
-    through ``bk.vmap_knobs`` over the **unique** (saw, delay-scale)
-    pairs (``knobs["pair_saw"]/["pair_dscale"]``) and the full knob
-    grid is assembled from those primitives with O(W × K) linear
-    algebra. A crossed width × delay × leakage grid therefore costs
-    ``len(unique pairs)`` heavy passes, not ``K``.
+    on ``(sa_width, delay_scale, window_scale)``, and every leakage
+    knob enters *linearly after* the segmented reductions. So the
+    heavy passes run through ``bk.vmap_knobs`` over the **unique**
+    (saw, delay-scale, window-scale) triples
+    (``knobs["pair_saw_idx"]/["pair_dscale"]/["pair_wscale"]``) and
+    the full knob grid is assembled from those primitives with
+    O(W × K) linear algebra. A crossed width × threshold × leakage
+    grid therefore costs ``len(unique triples)`` heavy passes, not
+    ``K``.
 
     Under ``shard_map`` (the multi-device path) the op axis may be
     sharded over the ``wl_axis`` mesh axis — every op-axis segment sum
@@ -1264,7 +1272,7 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
         """The masked threshold merges for ONE (saw, delay-scale) pair;
         the width-dependent structures are gathered from the stacked
         per-saw pass by index."""
-        si, d = kd["si"], kd["dscale"]
+        si, d, ws = kd["si"], kd["dscale"], kd["wscale"]
         comp = {c: {q: arr[si] for q, arr in cd.items()}
                 for c, cd in sb["comp"].items()}
         prims = {}
@@ -1274,7 +1282,7 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
             cc = comp[c]
             bet = scal[f"bet_{pol.delay_key}"] * d / scal["freq"]
             delay = scal[f"delay_{pol.delay_key}"] * d / scal["freq"]
-            window = bet * scal["window_frac"]
+            window = bet * scal["window_frac"] * ws
             gv = cc["gap_vals"]
             if pol.mode == "hw":
                 gmask = gv > window
@@ -1292,7 +1300,7 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
                 gap_cy = cc["gap_cy"]
                 psn_ = cc["psn"]
                 if pol.mode == "hw":
-                    window_cy = bet_cy * scal["window_frac"]
+                    window_cy = bet_cy * scal["window_frac"] * ws
                     gm = gap_cy > bet_cy
                     gf = xp.maximum(0.0, 1.0 - window_cy * cc["inv_gap"])
                     o["VA"] = segsum(xp.where(gm, psn_ * (1.0 - gf), psn_))
@@ -1321,7 +1329,8 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
         return prims
 
     all_prims = bk.vmap_knobs(per_pair, {"si": knobs["pair_saw_idx"],
-                                         "dscale": knobs["pair_dscale"]})
+                                         "dscale": knobs["pair_dscale"],
+                                         "wscale": knobs["pair_wscale"]})
     if knob_axis:
         # pairs are device-sharded: gather the (U, W)-sized primitives
         # so every device can assemble its local knob slice
@@ -1333,6 +1342,7 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
     # ---- full-knob assembly: O(W × K) linear algebra on the primitives
     k_full = knobs["dscale"].shape[0]
     dscale = knobs["dscale"][:, None]          # (K, 1)
+    wscale = knobs["wscale"][:, None]          # (K, 1)
     leak_logic = knobs["leak_logic"][:, None]
 
     def cell(c, pol):
@@ -1351,7 +1361,7 @@ def _sweep_kernel(data, knobs, policies, bk, wl_axis=None, knob_axis=None):
                   for q, a in all_prims[_cell_id(c, pol)].items()}
             bet = scal[f"bet_{pol.delay_key}"] * dscale / scal["freq"]
             delay = scal[f"delay_{pol.delay_key}"] * dscale / scal["freq"]
-            window = bet * scal["window_frac"]
+            window = bet * scal["window_frac"] * wscale
 
         # --- merged cross-op idle gaps (each closed once) ---
         if pol.mode == "none":
@@ -1642,13 +1652,15 @@ def _sharded_backend_data(st: StackedTrace, npu: NPUSpec, bk,
 
 def _knob_arrays(knob_grid, npu: NPUSpec, bk, pad_to: int = 0) -> dict:
     """Knob-grid arrays for the kernel: the full per-knob columns plus
-    the unique (sa_width, delay_scale) pairs the heavy passes vmap
-    over, with the inverse index mapping pairs back onto the grid.
+    the unique (sa_width, delay_scale, window_scale) triples the heavy
+    passes vmap over, with the inverse index mapping them back onto
+    the grid.
     ``pad_to`` pads the knob and pair axes to a multiple (repeating
     entry 0) so ``shard_map`` can split them evenly — the host slices
     the padded tail off the outputs."""
     g = npu.gating
     ds = np.array([k.delay_scale for k in knob_grid], np.float64)
+    ws = np.array([k.window_scale for k in knob_grid], np.float64)
     saw = np.array([float(k.sa_width) if k.sa_width is not None
                     else float(npu.sa_width) for k in knob_grid])
     leak_logic = np.array(
@@ -1662,29 +1674,31 @@ def _knob_arrays(knob_grid, npu: NPUSpec, bk, pad_to: int = 0) -> dict:
          else g.leak_sram_off for k in knob_grid], np.float64)
     saw_unique, saw_inv = np.unique(saw, return_inverse=True)
     saw_inv = saw_inv.reshape(-1).astype(np.int64)
-    pairs = np.stack([saw, ds], axis=1)
+    pairs = np.stack([saw, ds, ws], axis=1)
     uniq, inv = np.unique(pairs, axis=0, return_inverse=True)
     inv = inv.reshape(-1).astype(np.int64)
     pair_saw_idx = np.searchsorted(saw_unique, uniq[:, 0]).astype(np.int64)
     pair_ds = uniq[:, 1].copy()
+    pair_ws = uniq[:, 2].copy()
 
     def padded(a, m):
         p = (-len(a)) % m
         return a if p == 0 else np.concatenate([a, np.repeat(a[:1], p)])
 
     if pad_to:
-        ds, leak_logic, leak_sleep, leak_off, inv, saw_inv = (
+        ds, ws, leak_logic, leak_sleep, leak_off, inv, saw_inv = (
             padded(a, pad_to)
-            for a in (ds, leak_logic, leak_sleep, leak_off, inv,
+            for a in (ds, ws, leak_logic, leak_sleep, leak_off, inv,
                       saw_inv))
         # pair and unique-width axes are device-sharded as well; pads
         # repeat entry 0 / width 0 (inert duplicates — the inverse
         # indices never point at them, padding sits at the END)
-        pair_saw_idx, pair_ds, saw_unique = (
+        pair_saw_idx, pair_ds, pair_ws, saw_unique = (
             padded(a, pad_to)
-            for a in (pair_saw_idx, pair_ds, saw_unique))
+            for a in (pair_saw_idx, pair_ds, pair_ws, saw_unique))
     return {
         "dscale": bk.asarray(ds),
+        "wscale": bk.asarray(ws),
         "leak_logic": bk.asarray(leak_logic),
         "leak_sleep": bk.asarray(leak_sleep),
         "leak_off": bk.asarray(leak_off),
@@ -1696,6 +1710,7 @@ def _knob_arrays(knob_grid, npu: NPUSpec, bk, pad_to: int = 0) -> dict:
         "saw_inv": bk.asarray(saw_inv),
         "pair_saw_idx": bk.asarray(pair_saw_idx),
         "pair_dscale": bk.asarray(pair_ds),
+        "pair_wscale": bk.asarray(pair_ws),
         "pair_inv": bk.asarray(inv),
     }
 
@@ -1796,6 +1811,32 @@ def _evaluate_batch_backend(workloads, npu_specs, policies, knob_grid,
     return result
 
 
+def _validate_knob_grid(knob_grid) -> None:
+    """Reject knob values that would silently corrupt the sweep:
+    non-positive / non-finite delay scales flip gating inequalities,
+    negative leak fractions produce negative energies, and a
+    non-positive SA width breaks the occupancy model."""
+    for i, k in enumerate(knob_grid):
+        if not (np.isfinite(k.delay_scale) and k.delay_scale > 0):
+            raise ValueError(
+                f"knob {i}: delay_scale must be finite and > 0, got "
+                f"{k.delay_scale!r}")
+        if not (np.isfinite(k.window_scale) and k.window_scale > 0):
+            raise ValueError(
+                f"knob {i}: window_scale must be finite and > 0, got "
+                f"{k.window_scale!r}")
+        for fld in ("leak_off_logic", "leak_sram_sleep",
+                    "leak_sram_off"):
+            v = getattr(k, fld)
+            if v is not None and not (np.isfinite(v) and v >= 0):
+                raise ValueError(
+                    f"knob {i}: {fld} must be finite and >= 0, got "
+                    f"{v!r}")
+        if k.sa_width is not None and int(k.sa_width) < 1:
+            raise ValueError(
+                f"knob {i}: sa_width must be >= 1, got {k.sa_width!r}")
+
+
 def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
                    knob_grid=None, *, backend: Optional[str] = None,
                    jax_mesh=None) -> BatchResult:
@@ -1827,6 +1868,7 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     npu_specs = tuple(get_npu(n) if isinstance(n, str) else n for n in npus)
     policies = tuple(policies)
     knob_grid = (PolicyKnobs(),) if knob_grid is None else tuple(knob_grid)
+    _validate_knob_grid(knob_grid)
     backend = backend_mod.default_backend() if backend is None else backend
     if backend != "numpy" or jax_mesh is not None:
         if jax_mesh is not None and backend == "numpy":
@@ -1860,6 +1902,7 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
             kp = {
                 "K": len(sub_grid),
                 "dscale": np.array([k.delay_scale for k in sub_grid]),
+                "wscale": np.array([k.window_scale for k in sub_grid]),
                 "leak_logic": np.array(
                     [k.leak_off_logic if k.leak_off_logic is not None
                      else g.leak_off_logic for k in sub_grid]),

@@ -13,6 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Optional
 
+import numpy as np
+
 from repro.core.hw import NPUS, get_npu
 from repro.core.opgen import Workload, llm_workload
 from repro.core.sweep import group_by, sweep
@@ -89,6 +91,28 @@ def hbm_fits(model: str, npu: str, n_chips: int, batch: int,
         kv = c.L * batch * 4608 * 2 * c.Hkv * (c.d // c.H) * 2.0
         bytes_needed += kv
     return bytes_needed <= spec.hbm_gb * 1e9 * n_chips * 0.9
+
+
+def runtime_violation_rate(runtimes, baselines,
+                           slo_relax: float = 1.1) -> float:
+    """Fraction of cells whose runtime exceeds ``slo_relax`` x baseline.
+
+    The jitter-plane SLO metric (``sweep.sweep_robustness``): each
+    perturbed cell's baseline is the clean-trace runtime of the same
+    (workload, npu, policy, threshold) cell, so the rate measures how
+    often jitter alone pushes a configuration past its relaxed SLO.
+    Shapes must match element-for-element; empty input has rate 0.
+    """
+    if slo_relax <= 0:
+        raise ValueError(f"slo_relax must be > 0, got {slo_relax}")
+    r = np.asarray(runtimes, np.float64)
+    b = np.asarray(baselines, np.float64)
+    if r.shape != b.shape:
+        raise ValueError(
+            f"runtimes {r.shape} and baselines {b.shape} must match")
+    if r.size == 0:
+        return 0.0
+    return float(np.mean(r > slo_relax * b))
 
 
 def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,

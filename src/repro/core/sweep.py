@@ -27,6 +27,8 @@ from __future__ import annotations
 
 from typing import Iterable, Optional, Sequence
 
+import numpy as np
+
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.opgen import Workload, compile_trace
 from repro.core.policies import (POLICIES, BatchResult, EnergyReport,
@@ -46,6 +48,7 @@ def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
         "leak_sram_sleep": knobs.leak_sram_sleep,
         "leak_sram_off": knobs.leak_sram_off,
         "sa_width": knobs.sa_width,
+        "window_scale": knobs.window_scale,
         "runtime_s": rep.runtime_s,
         "total_j": rep.total_j,
         "static_total_j": sum(rep.static_j.values()),
@@ -83,18 +86,20 @@ def knob_product(delay_scale: Sequence[float] = (1.0,),
                  leak_off_logic: Sequence[Optional[float]] = (None,),
                  leak_sram_sleep: Sequence[Optional[float]] = (None,),
                  leak_sram_off: Sequence[Optional[float]] = (None,),
-                 sa_width: Sequence[Optional[int]] = (None,)) \
+                 sa_width: Sequence[Optional[int]] = (None,),
+                 window_scale: Sequence[float] = (1.0,)) \
         -> list[PolicyKnobs]:
     """Cross product of the §6.5 sensitivity knobs into a flat knob
-    grid: ``sa_width`` outermost, then delay-major as before
-    (``delay_scale``, ``leak_off_logic``, ``leak_sram_sleep``,
-    ``leak_sram_off`` innermost). ``None`` leaves a knob at the per-NPU
-    Table 3 default (``sa_width=None`` → the generation's native
-    width)."""
+    grid: ``sa_width`` outermost, then ``window_scale``, then
+    delay-major as before (``delay_scale``, ``leak_off_logic``,
+    ``leak_sram_sleep``, ``leak_sram_off`` innermost). ``None`` leaves
+    a knob at the per-NPU Table 3 default (``sa_width=None`` → the
+    generation's native width)."""
     return [PolicyKnobs(delay_scale=d, leak_off_logic=lo,
                         leak_sram_sleep=ls, leak_sram_off=lf,
-                        sa_width=sw)
-            for sw in sa_width for d in delay_scale
+                        sa_width=sw, window_scale=w)
+            for sw in sa_width for w in window_scale
+            for d in delay_scale
             for lo in leak_off_logic for ls in leak_sram_sleep
             for lf in leak_sram_off]
 
@@ -107,15 +112,16 @@ def sweep_grid(workloads: Sequence[Workload] | Workload,
                leak_sram_sleep: Sequence[Optional[float]] = (None,),
                leak_sram_off: Sequence[Optional[float]] = (None,),
                sa_width: Sequence[Optional[int]] = (None,),
+               window_scale: Sequence[float] = (1.0,),
                backend: Optional[str] = None, jax_mesh=None,
                as_records: bool = True):
     """Fine-grid design-space sweep: the §6.5 sensitivity axes crossed
     into one ``evaluate_batch`` call (CompPow-style component × knob
     exploration at 100k-cell scale).
 
-    All five axes (``sa_width × delay_scale × leak_off_logic ×
-    leak_sram_sleep × leak_sram_off``) become the knob grid via
-    ``knob_product`` — since ISSUE 5, ``sa_width`` is a real knob
+    All six axes (``sa_width × window_scale × delay_scale ×
+    leak_off_logic × leak_sram_sleep × leak_sram_off``) become the
+    knob grid via ``knob_product`` — since ISSUE 5, ``sa_width`` is a real knob
     (``PolicyKnobs.sa_width``) rather than a set of renamed NPU
     variants: records carry it in their ``sa_width`` column with the
     NPU name untouched, and the jax kernel traces it, so a width axis
@@ -137,12 +143,167 @@ def sweep_grid(workloads: Sequence[Workload] | Workload,
     if sa_width is None:  # the pre-ISSUE-5 "no width axis" spelling
         sa_width = (None,)
     knob_grid = knob_product(delay_scale, leak_off_logic,
-                             leak_sram_sleep, leak_sram_off, sa_width)
+                             leak_sram_sleep, leak_sram_off, sa_width,
+                             window_scale)
     npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
     res: BatchResult = evaluate_batch(
         workloads, npu_specs, tuple(policies), tuple(knob_grid),
         backend=backend, jax_mesh=jax_mesh)
     return res.records() if as_records else res
+
+
+def sweep_robustness(workloads: Sequence[Workload] | Workload,
+                     npus: Iterable[NPUSpec | str] = ("NPU-D",),
+                     policies: Iterable[str] = ("ReGate-HW",), *,
+                     severities: Sequence[float] = (0.0, 0.5, 1.0),
+                     threshold_scales: Sequence[float] =
+                     (0.25, 0.5, 1.0, 2.0, 4.0),
+                     seed: int = 0, slo_relax: float = 1.1,
+                     topology: bool = True,
+                     backend: Optional[str] = None,
+                     jax_mesh=None) -> dict:
+    """Idle-detection robustness sweep (jitter plane, ISSUE 6).
+
+    Crosses HW idle-detection thresholds (``threshold_scales``, the
+    ``window_scale`` knob — it scales ONLY the idle-detection window,
+    the paper's BET/3 design point, leaving BETs and wake delays at
+    their Table 3 values, so aggressive and conservative detection
+    genuinely trade off and a clean-tuned threshold can regret under
+    jitter) against perturbation severities (``repro.core.perturb.severity_plan``
+    applied with deterministic per-(severity, workload) generators seeded
+    from ``seed``) in ONE ``sweep_grid``-style ``evaluate_batch`` pass:
+    every (severity x workload) variant is stacked into the super-trace,
+    with ``topology=True`` first lowering collectives onto their ring /
+    2-D-mesh step schedules (``repro.core.ici_topology``).
+
+    Reports, per (npu, policy, severity):
+
+    * ``worst_exposed_wake_s`` — worst over workloads of the exposed-wake
+      overhead (runtime minus the same cell's NoPG runtime) at the
+      *deployed* threshold, i.e. the one that minimizes clean-trace
+      energy per workload; ``worst_exposed_wake_any_s`` maxes over the
+      whole threshold axis too.
+    * ``slo_violation_rate`` — via ``slo.runtime_violation_rate``:
+      fraction of workloads whose perturbed runtime at the deployed
+      threshold exceeds ``slo_relax`` x its clean runtime.
+    * ``max_regret_frac`` / ``mean_regret_frac`` — *SLO-constrained
+      energy regret* of the clean-tuned threshold under jitter. Total
+      energy is monotone in the detection window (per-PE SA gating has
+      a 1-cycle wake, so a smaller window always saves energy), which
+      pins the clean optimum at the most aggressive threshold; what
+      jitter breaks is its *runtime*: fragmented idle makes the
+      aggressive window gate every shard of an interval and pay the
+      exposed wake delay each time. So regret is measured over the
+      SLO-feasible set: if the deployed threshold still meets
+      ``slo_relax`` x its clean runtime it is kept (regret relative to
+      the unconstrained per-severity optimum — 0 when they coincide);
+      once jitter pushes it past the SLO the operator must re-tune to
+      the cheapest *feasible* threshold (or the least-violating one if
+      none is feasible), and the regret is that configuration's energy
+      over the unconstrained optimum — the energy given up to stay
+      within SLO. Severity 0 has zero regret by construction.
+
+    Returns ``{"records", "summary", "severities", "threshold_scales"}``
+    where ``records`` has one dict per (workload, npu, policy, severity,
+    threshold) cell.
+    """
+    from repro.core.ici_topology import lower_collectives
+    from repro.core.perturb import perturb_suite, severity_plan
+    from repro.core.slo import runtime_violation_rate
+    if isinstance(workloads, Workload):
+        workloads = [workloads]
+    workloads = list(workloads)
+    severities = [float(s) for s in severities]
+    threshold_scales = [float(t) for t in threshold_scales]
+    if any(t <= 0 or not np.isfinite(t) for t in threshold_scales):
+        raise ValueError(
+            f"threshold_scales must be finite and > 0: {threshold_scales}")
+    base = [lower_collectives(wl) if topology else wl for wl in workloads]
+    w_n, s_n, t_n = len(base), len(severities), len(threshold_scales)
+    pol_in = tuple(policies)
+    pols = pol_in if "NoPG" in pol_in else pol_in + ("NoPG",)
+    npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
+
+    variants: list[Workload] = []
+    for si, sev in enumerate(severities):
+        variants.extend(perturb_suite(
+            base, severity_plan(sev), seed=seed, stream=si,
+            names=[f"{wl.name}@s{si}" for wl in base]))
+    res: BatchResult = evaluate_batch(
+        variants, npu_specs, pols,
+        tuple(PolicyKnobs(window_scale=t) for t in threshold_scales),
+        backend=backend, jax_mesh=jax_mesh)
+
+    rt = res.runtime_s                       # (S*W, A, P, T)
+    tot = np.zeros_like(rt)
+    for c in COMPONENTS:
+        tot += res.static_j[c] + res.dynamic_j[c]
+    nopg_pi = pols.index("NoPG")
+    exposed = np.maximum(0.0, rt - rt[:, :, nopg_pi:nopg_pi + 1, :])
+
+    records: list[dict] = []
+    summary: list[dict] = []
+    for ai, npu in enumerate(npu_specs):
+        for pi, policy in enumerate(pol_in):
+            # deployed threshold: clean-trace (severity index 0) optimum
+            kstar = np.argmin(tot[:w_n, ai, pi, :], axis=1)   # (W,)
+            wi_ix = np.arange(w_n)
+            for si, sev in enumerate(severities):
+                rows = slice(si * w_n, (si + 1) * w_n)
+                e_s = tot[rows, ai, pi, :]                     # (W, T)
+                r_s = rt[rows, ai, pi, :]
+                x_s = exposed[rows, ai, pi, :]
+                opt = e_s.min(axis=1)
+                # SLO-feasible set per workload: perturbed runtime vs
+                # the SAME threshold's clean runtime
+                r_clean = rt[:w_n, ai, pi, :]                  # (W, T)
+                feas = r_s <= slo_relax * r_clean
+                # chosen threshold: the deployed one while feasible;
+                # past the SLO, the cheapest feasible (or the
+                # least-violating when nothing is feasible)
+                kchos = kstar.copy()
+                for wi in range(w_n):
+                    if feas[wi, kstar[wi]]:
+                        continue
+                    if feas[wi].any():
+                        cand = np.flatnonzero(feas[wi])
+                        kchos[wi] = cand[np.argmin(e_s[wi, cand])]
+                    else:
+                        kchos[wi] = int(np.argmin(r_s[wi]
+                                                  / r_clean[wi]))
+                regret = e_s[wi_ix, kchos] - opt
+                regret_frac = regret / np.maximum(opt, 1e-300)
+                viol = runtime_violation_rate(
+                    r_s[wi_ix, kstar],
+                    r_clean[wi_ix, kstar], slo_relax)
+                summary.append({
+                    "npu": npu.name, "policy": policy,
+                    "severity": sev,
+                    "worst_exposed_wake_s":
+                        float(x_s[wi_ix, kstar].max(initial=0.0)),
+                    "worst_exposed_wake_any_s":
+                        float(x_s.max(initial=0.0)),
+                    "slo_violation_rate": viol,
+                    "max_regret_frac":
+                        float(regret_frac.max(initial=0.0)),
+                    "mean_regret_frac":
+                        float(regret_frac.mean()) if w_n else 0.0,
+                })
+                for wi, wl in enumerate(workloads):
+                    for ki, ts in enumerate(threshold_scales):
+                        records.append({
+                            "workload": wl.name, "npu": npu.name,
+                            "policy": policy, "severity": sev,
+                            "window_scale": ts,
+                            "runtime_s": float(r_s[wi, ki]),
+                            "total_j": float(e_s[wi, ki]),
+                            "exposed_wake_s": float(x_s[wi, ki]),
+                            "deployed": bool(ki == kstar[wi]),
+                            "chosen": bool(ki == kchos[wi]),
+                        })
+    return {"records": records, "summary": summary,
+            "severities": severities,
+            "threshold_scales": threshold_scales}
 
 
 def sweep_reference(workloads: Sequence[Workload] | Workload,

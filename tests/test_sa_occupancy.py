@@ -13,6 +13,11 @@ import math
 
 import numpy as np
 
+# Explicit property-test seeds, hoisted so the deterministic streams
+# are visible at module scope and changed deliberately, never ad hoc.
+SEED_SHAPES = 7      # randomized (M, K, N) shape sweep
+SEED_TINY = 3        # tiny-dims fuzz vs the exact PE-grid simulation
+
 from repro.core.sa_gating import (gating_cache_info, gating_stats,
                                   gating_stats_batch,
                                   gating_stats_batch_reference,
@@ -53,7 +58,7 @@ def test_xp_matches_scalar_ragged_tile_families():
 
 
 def test_xp_matches_scalar_randomized_all_widths():
-    rng = np.random.default_rng(7)
+    rng = np.random.default_rng(SEED_SHAPES)
     Ms = np.concatenate([rng.integers(1, 5000, 300), [1, 131072]])
     Ks = np.concatenate([rng.integers(1, 3000, 300), [1, 16384]])
     Ns = np.concatenate([rng.integers(1, 3000, 300), [1, 8016]])
@@ -102,7 +107,7 @@ def test_xp_traced_saw_array_broadcast():
 def test_xp_matches_cycle_simulation_single_tile():
     """Against the exact PE_on propagation sim (one weight tile,
     weight_load_cycles=0), including M<SAW and ragged-both."""
-    rng = np.random.default_rng(3)
+    rng = np.random.default_rng(SEED_TINY)
     for _ in range(30):
         saw = int(rng.choice([2, 4, 8, 12]))
         M = int(rng.integers(1, 3 * saw))

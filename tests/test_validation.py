@@ -1,0 +1,78 @@
+"""Input-validation hardening (jitter plane, ISSUE 6, satellite).
+
+Malformed op streams and knob grids must fail loudly at the boundary —
+``compile_trace`` / ``stack_traces`` / ``evaluate_batch`` — naming the
+workload, op, and field, instead of silently corrupting service times
+or flipping gating inequalities deep in the sweep kernels.
+"""
+import numpy as np
+import pytest
+
+from repro.core.opgen import (Op, Workload, compile_trace, llm_workload,
+                              stack_traces)
+from repro.core.policies import PolicyKnobs, evaluate_batch
+
+GOOD = llm_workload("llama3-8b", "decode", batch=8, n_chips=8, tp=8,
+                    dp=1)
+
+
+def _wl(op, name="bad-wl"):
+    return Workload(name, "decode", (Op("warmup", flops_vu=1e6), op))
+
+
+@pytest.mark.parametrize("field,value,kind", [
+    ("flops_sa", -1.0, "negative"),
+    ("flops_vu", float("nan"), "non-finite"),
+    ("bytes_hbm", float("inf"), "non-finite"),
+    ("bytes_ici", -3.5, "negative"),
+    ("count", -2, "negative"),
+])
+def test_compile_trace_rejects_bad_carriers(field, value, kind):
+    wl = _wl(Op("evil", **{field: value}))
+    with pytest.raises(ValueError) as e:
+        compile_trace(wl)
+    msg = str(e.value)
+    assert "bad-wl" in msg and "evil" in msg
+    assert field in msg and kind in msg
+
+
+def test_compile_trace_rejects_zero_matmul_dims():
+    wl = _wl(Op("mm", flops_sa=1e9, matmul_dims=(128, 0, 128)))
+    with pytest.raises(ValueError, match="matmul_dims"):
+        compile_trace(wl)
+
+
+def test_stack_traces_rejects_non_workload():
+    with pytest.raises(ValueError, match="index 1"):
+        stack_traces([GOOD, {"not": "a workload"}])
+
+
+def test_stack_traces_rejects_malformed_member():
+    with pytest.raises(ValueError, match="bad-wl"):
+        stack_traces([GOOD, _wl(Op("evil", bytes_hbm=-1.0))])
+
+
+@pytest.mark.parametrize("knob,field", [
+    (PolicyKnobs(delay_scale=0.0), "delay_scale"),
+    (PolicyKnobs(delay_scale=float("nan")), "delay_scale"),
+    (PolicyKnobs(window_scale=0.0), "window_scale"),
+    (PolicyKnobs(window_scale=-1.0), "window_scale"),
+    (PolicyKnobs(window_scale=float("nan")), "window_scale"),
+    (PolicyKnobs(leak_off_logic=-0.1), "leak_off_logic"),
+    (PolicyKnobs(leak_sram_sleep=float("inf")), "leak_sram_sleep"),
+    (PolicyKnobs(sa_width=0), "sa_width"),
+])
+def test_evaluate_batch_rejects_bad_knobs(knob, field):
+    grid = (PolicyKnobs(), knob)
+    with pytest.raises(ValueError) as e:
+        evaluate_batch([GOOD], ("NPU-D",), ("ReGate-HW",), grid)
+    assert field in str(e.value)
+    assert "knob 1" in str(e.value)
+
+
+def test_good_grid_still_passes():
+    res = evaluate_batch(
+        [GOOD], ("NPU-D",), ("ReGate-HW",),
+        (PolicyKnobs(window_scale=0.5, delay_scale=2.0, sa_width=64),),
+        backend="numpy")
+    assert np.isfinite(res.runtime_s).all()
