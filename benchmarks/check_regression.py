@@ -32,6 +32,7 @@ DEFAULT_PAIRS = [
     "BENCH_sweep_jax.json:BENCH_sweep_jax.new.json",
     "BENCH_sweep_multidevice.json:BENCH_sweep_multidevice.new.json",
     "BENCH_perturb.json:BENCH_perturb.new.json",
+    "BENCH_fleet.json:BENCH_fleet.new.json",
 ]
 
 

@@ -8,10 +8,10 @@ dry-run roofline table. Prints ``name,value,derived`` CSV.
 ``--json`` additionally writes a machine-readable artifact with every
 row plus per-benchmark wall times, so the perf trajectory of the
 simulator itself lands in version-controlled ``BENCH_*.json`` files.
-``--backend`` sets the session-default array backend
-(``repro.core.backend.set_default_backend``) so every batched sweep a
-figure runs — without threading a flag through each function — executes
-on the chosen substrate.
+``--backend`` scopes the whole run inside a
+``repro.core.session.SweepSession`` so every batched sweep a figure
+runs — without threading a flag through each function — executes on the
+chosen substrate.
 """
 from __future__ import annotations
 
@@ -29,13 +29,17 @@ def main(argv=None) -> int:
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows + timings to this JSON file")
     ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
-                    help="session-default array backend for all sweeps")
+                    help="session array backend for all sweeps")
     args = ap.parse_args(argv)
 
     if args.backend:
-        from repro.core.backend import set_default_backend
-        set_default_backend(args.backend)
+        from repro.core.session import SweepSession
+        with SweepSession(backend=args.backend):
+            return _run(args)
+    return _run(args)
 
+
+def _run(args) -> int:
     from benchmarks.figures import REGISTRY
     from benchmarks import arch_power, roofline_table
 

@@ -59,8 +59,13 @@ def main(argv=None):
                          "crossed knobs)")
     args = ap.parse_args(argv)
     if args.backend:
-        from repro.core.backend import set_default_backend
-        set_default_backend(args.backend)
+        from repro.core.sweep import SweepSession
+        with SweepSession(backend=args.backend):
+            return _study(args)
+    return _study(args)
+
+
+def _study(args):
     t_start = time.perf_counter()
     print(f"{'workload':24s} {'static%':>8s} "
           + "".join(f"{p:>13s}" for p in POLICIES[1:])

@@ -1,6 +1,13 @@
 """Serve a small model with batched requests (prefill + decode loop).
 
   PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-3b
+
+Arrival-driven mode (ISSUE 7): feed the server a seeded fleet-plane
+arrival trace (Poisson/diurnal/bursty, ``repro.core.fleet``) with
+requests joining at the next epoch boundary:
+
+  PYTHONPATH=src python examples/serve_batched.py --arrivals bursty \\
+      --rate 2 --duration 20 --epoch 4
 """
 from repro.launch.serve import main
 

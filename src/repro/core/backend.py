@@ -50,6 +50,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from repro.core import session
+
 _X64_HELP = (
     "the jax sweep backend requires float64 (x64). Enable it globally "
     "before jax is first used — `import jax; "
@@ -138,17 +140,22 @@ class JaxBackend:
                 "backend='numpy' or install jax") from e
         self._jax = jax
         self.xp = jnp
-        # SA occupancy pass inside the jitted sweep kernel: "jnp" (the
-        # pure-jnp closed form, the oracle) or "pallas" (the
-        # kernels/sa_occupancy.py tile kernel, interpret=True on CPU).
-        # Switch via ``set_sa_occupancy_impl``; the sweep kernel cache
-        # keys on it so flipping recompiles cleanly.
-        self.sa_occupancy_impl = "jnp"
         try:
             from jax.experimental import enable_x64
             self._x64_ctx: Optional[Callable] = enable_x64
         except ImportError:  # pragma: no cover - future jax drift
             self._x64_ctx = None
+
+    @property
+    def sa_occupancy_impl(self) -> str:
+        """SA occupancy pass inside the jitted sweep kernel: "jnp" (the
+        pure-jnp closed form, the oracle) or "pallas" (the
+        kernels/sa_occupancy.py tile kernel, interpret=True on CPU).
+        Session-scoped state (``repro.core.session``): switch via
+        ``set_sa_occupancy_impl`` or ``SweepSession(sa_occupancy_impl=)``;
+        the sweep kernel cache keys on it so flipping recompiles
+        cleanly."""
+        return session.resolve("sa_occupancy_impl")
 
     # -- x64 discipline ------------------------------------------------
     def x64_enabled(self) -> bool:
@@ -263,7 +270,6 @@ class JaxBackend:
 
 
 _BACKENDS: dict[str, object] = {}
-_DEFAULT_BACKEND = "numpy"
 
 BACKEND_NAMES = ("numpy", "jax")
 
@@ -275,7 +281,7 @@ def get_backend(name: Optional[str] = None):
     that must survive across sweep calls for compile-once reuse.
     """
     if name is None:
-        name = _DEFAULT_BACKEND
+        name = session.resolve("backend")
     bk = _BACKENDS.get(name)
     if bk is not None:
         return bk
@@ -291,20 +297,20 @@ def get_backend(name: Optional[str] = None):
 
 
 def set_default_backend(name: str) -> str:
-    """Set the session default (what ``backend=None`` resolves to);
-    returns the previous default. Used by ``benchmarks/run.py
-    --backend`` to steer every sweep in a run without threading a flag
-    through each figure function."""
-    global _DEFAULT_BACKEND
+    """Set the process default (what ``backend=None`` resolves to);
+    returns the previous default. Delegates to the root
+    ``repro.core.session`` layer — an active ``SweepSession`` that pins
+    ``backend`` shadows the new default until it exits. Prefer
+    ``with SweepSession(backend=...)`` for scoped overrides."""
     if name not in BACKEND_NAMES:
         raise KeyError(f"unknown array backend {name!r}; "
                        f"have {BACKEND_NAMES}")
-    prev, _DEFAULT_BACKEND = _DEFAULT_BACKEND, name
-    return prev
+    return session.set_root(backend=name)["backend"]
 
 
 def default_backend() -> str:
-    return _DEFAULT_BACKEND
+    """The effective session default backend name."""
+    return session.resolve("backend")
 
 
 SA_OCCUPANCY_IMPLS = ("jnp", "pallas")
@@ -320,8 +326,8 @@ def set_sa_occupancy_impl(name: str) -> str:
     if name not in SA_OCCUPANCY_IMPLS:
         raise KeyError(f"unknown sa_occupancy impl {name!r}; "
                        f"have {SA_OCCUPANCY_IMPLS}")
-    bk = get_backend("jax")
-    prev, bk.sa_occupancy_impl = bk.sa_occupancy_impl, name
+    prev = session.resolve("sa_occupancy_impl")
+    session.set_root(sa_occupancy_impl=name)
     return prev
 
 

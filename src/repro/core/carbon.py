@@ -18,6 +18,9 @@ CARBON_INTENSITY = 0.0624   # kgCO2e/kWh (paper: Google 2024 report)
 PUE = 1.1
 DUTY_CYCLE = 0.60
 HOURS_PER_YEAR = 8766.0
+# industrial electricity price used by the fleet plane's cost roll-up
+# (US EIA industrial average, $/kWh at the meter — PUE applied on top)
+USD_PER_KWH = 0.08
 
 # embodied carbon per chip+share of system, kgCO2e (from the cradle-to-grave
 # TPU study the paper cites [75]; interpolated for A/B/E)
@@ -54,6 +57,42 @@ def yearly_carbon(avg_busy_power_w: float, npu: NPUSpec | str,
         workload=workload, npu=npu.name, policy=policy,
         operational_kg_per_year=busy_kwh * PUE * CARBON_INTENSITY,
         idle_kg_per_year=idle_kwh * PUE * CARBON_INTENSITY)
+
+
+@dataclass(frozen=True)
+class FleetRollup:
+    """Fleet-level energy accounting for one policy over one scenario
+    window: chip joules → facility kWh (×PUE) → kgCO2e and USD."""
+    chip_j: float           # sum of per-chip energies (busy + idle)
+    chip_kwh: float         # the same energy in kWh (no PUE)
+    facility_kwh: float     # at the meter: chip_kwh x PUE
+    co2_kg: float           # facility_kwh x CARBON_INTENSITY
+    cost_usd: float         # facility_kwh x USD_PER_KWH
+
+
+def fleet_rollup(total_chip_j: float, *, pue: float = PUE,
+                 carbon_intensity: float = CARBON_INTENSITY,
+                 usd_per_kwh: float = USD_PER_KWH) -> FleetRollup:
+    """Roll a fleet's summed per-chip joules up to facility-level
+    kWh / operational CO2 / electricity cost (ISSUE 7 fleet plane).
+
+    The input is the exact sum of per-chip energies the fleet simulator
+    accumulated (busy invocation energy + idle/gated-idle energy across
+    every chip and epoch); the roll-up is pure arithmetic on that sum,
+    so fleet reports reconcile with their per-record energies to float
+    round-off (the ≤1e-9 acceptance bound). Embodied carbon is out of
+    scope here — ``optimal_lifespan`` covers it.
+    """
+    if not (math.isfinite(total_chip_j) and total_chip_j >= 0):
+        raise ValueError(
+            f"total_chip_j must be finite and >= 0, got {total_chip_j}")
+    chip_kwh = joules_to_kwh(total_chip_j)
+    facility_kwh = chip_kwh * pue
+    return FleetRollup(
+        chip_j=total_chip_j, chip_kwh=chip_kwh,
+        facility_kwh=facility_kwh,
+        co2_kg=facility_kwh * carbon_intensity,
+        cost_usd=facility_kwh * usd_per_kwh)
 
 
 def optimal_lifespan(per_year_kg_gen0: float, *, horizon_years: int = 10,

@@ -330,6 +330,35 @@ def perturb_suite(workloads: Sequence[Workload],
     return out
 
 
+def severity_variants(workloads: Sequence[Workload],
+                      severities: Sequence[float], *,
+                      seed: int) -> dict[float, list[Workload]]:
+    """Pre-built trace variants per severity level — the fleet plane's
+    traffic-variability hook (ISSUE 7, the ROADMAP follow-up that lets
+    fleet scenarios draw their variability from the same perturbation
+    plans as the jitter plane).
+
+    For each level ``severities[si]`` the whole workload list is run
+    through ``severity_plan(level)`` with ``stream=si`` (children seeded
+    ``(seed, si, workload_index)``), so a fleet epoch can select its
+    congestion level by indexing the returned dict instead of
+    re-perturbing per epoch — the variant *objects* are stable, which
+    keeps the identity-cached stack/compile pipeline warm across
+    epochs. Severity 0 yields renamed but bit-identical traces; every
+    variant preserves op counts (stable stack shapes → the jitted sweep
+    program is reused across all levels).
+    """
+    out: dict[float, list[Workload]] = {}
+    for si, sev in enumerate(severities):
+        sev = float(sev)
+        if sev in out:
+            raise ValueError(f"duplicate severity level {sev}")
+        out[sev] = perturb_suite(
+            list(workloads), severity_plan(sev), seed=seed, stream=si,
+            names=[f"{wl.name}@sev{si}" for wl in workloads])
+    return out
+
+
 # --------------------------------------------------------------------------
 # Adversarial ISA programs + differential fuzz harness
 # --------------------------------------------------------------------------

@@ -60,7 +60,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -100,6 +100,116 @@ class PolicyKnobs:
     # leaving wake-up delays and BETs alone — the genuine detection-
     # threshold axis for the jitter-plane robustness sweep.
     window_scale: float = 1.0
+
+
+def _knob_axis(name: str, values) -> tuple:
+    """Coerce one ``KnobGrid`` axis to a validated tuple. A bare scalar
+    (including ``None``) is a one-point axis."""
+    if values is None or np.isscalar(values):
+        values = (values,)
+    axis = tuple(values)
+    if not axis:
+        raise ValueError(f"KnobGrid axis {name!r} must be non-empty")
+    for v in axis:
+        if name in ("delay_scale", "window_scale"):
+            if v is None or not (np.isfinite(v) and v > 0):
+                raise ValueError(
+                    f"KnobGrid axis {name!r}: values must be finite and "
+                    f"> 0, got {v!r}")
+        elif name == "sa_width":
+            if v is not None and not (float(v).is_integer()
+                                      and int(v) >= 1):
+                raise ValueError(
+                    f"KnobGrid axis {name!r}: values must be None or "
+                    f"an integer >= 1, got {v!r}")
+        else:  # leakage fractions
+            if v is not None and not (np.isfinite(v) and v >= 0):
+                raise ValueError(
+                    f"KnobGrid axis {name!r}: values must be None or "
+                    f"finite and >= 0, got {v!r}")
+    return axis
+
+
+@dataclass(frozen=True)
+class KnobGrid:
+    """The §6.5 sensitivity axes as one first-class object (ISSUE 7).
+
+    Replaces the six parallel kwargs that used to be repeated across
+    ``knob_product`` / ``sweep_grid`` / ``sweep_robustness``: each field
+    is one axis (a bare scalar is a one-point axis; ``None`` entries
+    mean the per-NPU Table 3 default, and ``sa_width=None`` the
+    generation's native width), validated at construction, and
+    ``product()`` crosses them into the flat ``PolicyKnobs`` grid in
+    the canonical knob ordering — ``sa_width`` outermost, then
+    ``window_scale``, then ``delay_scale``, ``leak_off_logic``,
+    ``leak_sram_sleep``, ``leak_sram_off`` innermost (byte-identical to
+    the legacy ``knob_product`` ordering, so record tables and
+    ``knob_idx`` values are unchanged). All sweep entry points
+    (``sweep`` / ``sweep_grid`` / ``evaluate_batch`` / ``sweep_fleet``)
+    accept a ``KnobGrid`` wherever they accept a knob sequence.
+    """
+
+    delay_scale: Sequence[float] = (1.0,)
+    leak_off_logic: Sequence[Optional[float]] = (None,)
+    leak_sram_sleep: Sequence[Optional[float]] = (None,)
+    leak_sram_off: Sequence[Optional[float]] = (None,)
+    sa_width: Sequence[Optional[int]] = (None,)
+    window_scale: Sequence[float] = (1.0,)
+
+    #: record-table column names for the knob axes (with ``knob_idx``
+    #: these are the columns every sweep record carries unconditionally)
+    COLUMNS = ("delay_scale", "leak_off_logic", "leak_sram_sleep",
+               "leak_sram_off", "sa_width", "window_scale")
+
+    def __post_init__(self):
+        for name in self.COLUMNS:
+            object.__setattr__(self, name,
+                               _knob_axis(name, getattr(self, name)))
+
+    @classmethod
+    def columns(cls) -> tuple[str, ...]:
+        """The knob column names emitted into every sweep record."""
+        return cls.COLUMNS
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for name in self.COLUMNS:
+            n *= len(getattr(self, name))
+        return n
+
+    def product(self) -> list[PolicyKnobs]:
+        """Cross the axes into the flat knob grid (canonical order)."""
+        return [PolicyKnobs(delay_scale=d, leak_off_logic=lo,
+                            leak_sram_sleep=ls, leak_sram_off=lf,
+                            sa_width=sw, window_scale=w)
+                for sw in self.sa_width for w in self.window_scale
+                for d in self.delay_scale
+                for lo in self.leak_off_logic
+                for ls in self.leak_sram_sleep
+                for lf in self.leak_sram_off]
+
+
+def as_knob_tuple(knob_grid) -> tuple[PolicyKnobs, ...]:
+    """Normalize any accepted knob-grid spelling — ``None`` (the single
+    default knob point), a ``KnobGrid``, or a sequence of
+    ``PolicyKnobs`` — to the flat tuple the batched engines consume."""
+    if knob_grid is None:
+        return (PolicyKnobs(),)
+    if isinstance(knob_grid, KnobGrid):
+        return tuple(knob_grid.product())
+    return tuple(knob_grid)
+
+
+def knob_columns(knobs: PolicyKnobs, knob_idx: int) -> dict:
+    """The knob columns of one sweep record (``knob_idx`` + every
+    ``KnobGrid.columns()`` entry, emitted unconditionally so record
+    consumers like ``sweep.with_savings``/``sweep.group_by`` never see
+    a missing axis)."""
+    rec = {"knob_idx": int(knob_idx)}
+    for name in KnobGrid.COLUMNS:
+        rec[name] = getattr(knobs, name)
+    return rec
 
 
 @dataclass
@@ -1861,15 +1971,24 @@ def evaluate_batch(workloads, npus=("NPU-D",), policies=POLICIES,
     axis — optionally crossed with ``"wl"`` — runs the explicit
     ``shard_map`` program that also shards the unique-width /
     (width, delay)-pair / knob axes (jax backend only).
+
+    ``knob_grid`` accepts a ``KnobGrid`` (crossed via ``product()``), a
+    flat sequence of ``PolicyKnobs``, or ``None`` (the single default
+    point). ``backend=None`` / ``jax_mesh=None`` resolve through the
+    active ``repro.core.session.SweepSession`` (the session mesh is
+    only consulted when the effective backend is jax).
     """
     if isinstance(workloads, Workload):
         workloads = [workloads]
     workloads = list(workloads)
     npu_specs = tuple(get_npu(n) if isinstance(n, str) else n for n in npus)
     policies = tuple(policies)
-    knob_grid = (PolicyKnobs(),) if knob_grid is None else tuple(knob_grid)
+    knob_grid = as_knob_tuple(knob_grid)
     _validate_knob_grid(knob_grid)
     backend = backend_mod.default_backend() if backend is None else backend
+    if jax_mesh is None and backend != "numpy":
+        from repro.core import session
+        jax_mesh = session.resolve("jax_mesh")
     if backend != "numpy" or jax_mesh is not None:
         if jax_mesh is not None and backend == "numpy":
             raise ValueError("jax_mesh requires backend='jax'")

@@ -115,6 +115,43 @@ def runtime_violation_rate(runtimes, baselines,
     return float(np.mean(r > slo_relax * b))
 
 
+def retune_knobs(energy, runtime, slo_runtime,
+                 deployed=None) -> np.ndarray:
+    """The SLO-constrained knob re-tune rule, vectorized over rows.
+
+    This is the operator policy shared by the jitter plane
+    (``sweep.sweep_robustness``) and the fleet governor
+    (``fleet.sweep_fleet``): given per-row knob candidates with
+    ``energy`` and ``runtime`` of shape (N, K) and an SLO runtime bound
+    ``slo_runtime`` (broadcastable to (N, K)), keep the ``deployed``
+    knob (default: the per-row energy argmin) while it meets the bound;
+    once it violates, re-tune to the cheapest (lowest-energy) feasible
+    knob; when no knob is feasible, fall back to the least-violating
+    one (smallest runtime/bound ratio). Ties resolve to the lowest knob
+    index. Returns the chosen knob index per row, shape (N,).
+    """
+    e = np.asarray(energy, np.float64)
+    r = np.asarray(runtime, np.float64)
+    b = np.broadcast_to(np.asarray(slo_runtime, np.float64), r.shape)
+    if e.shape != r.shape or e.ndim != 2:
+        raise ValueError(
+            f"energy {e.shape} and runtime {r.shape} must be equal 2-D")
+    n = e.shape[0]
+    rows = np.arange(n)
+    if deployed is None:
+        deployed = np.argmin(e, axis=1)
+    deployed = np.asarray(deployed, np.int64)
+    feas = r <= b
+    any_feas = feas.any(axis=1)
+    cheapest = np.argmin(np.where(feas, e, np.inf), axis=1)
+    least_viol = np.argmin(r / np.maximum(b, 1e-300), axis=1)
+    chosen = deployed.copy()
+    need = ~feas[rows, deployed]
+    chosen[need & any_feas] = cheapest[need & any_feas]
+    chosen[need & ~any_feas] = least_viol[need & ~any_feas]
+    return chosen
+
+
 def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,
               gens=("NPU-A", "NPU-B", "NPU-C", "NPU-D", "NPU-E"),
               batches=(1, 4, 8, 32, 128, 512),

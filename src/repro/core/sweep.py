@@ -32,8 +32,10 @@ import numpy as np
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.opgen import Workload, compile_trace
 from repro.core.policies import (POLICIES, BatchResult, EnergyReport,
-                                 PolicyKnobs, evaluate, evaluate_batch)
+                                 KnobGrid, PolicyKnobs, evaluate,
+                                 evaluate_batch, knob_columns)
 from repro.core.power import COMPONENTS
+from repro.core.session import SweepSession  # noqa: F401  (re-export)
 
 
 def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
@@ -42,13 +44,9 @@ def _flatten(rep: EnergyReport, knobs: PolicyKnobs, knob_idx: int,
         "workload": rep.workload,
         "npu": rep.npu,
         "policy": rep.policy,
-        "knob_idx": knob_idx,
-        "delay_scale": knobs.delay_scale,
-        "leak_off_logic": knobs.leak_off_logic,
-        "leak_sram_sleep": knobs.leak_sram_sleep,
-        "leak_sram_off": knobs.leak_sram_off,
-        "sa_width": knobs.sa_width,
-        "window_scale": knobs.window_scale,
+        # every knob column, unconditionally (KnobGrid.columns()):
+        # record consumers (with_savings / group_by) key on these
+        **knob_columns(knobs, knob_idx),
         "runtime_s": rep.runtime_s,
         "total_j": rep.total_j,
         "static_total_j": sum(rep.static_j.values()),
@@ -89,24 +87,24 @@ def knob_product(delay_scale: Sequence[float] = (1.0,),
                  sa_width: Sequence[Optional[int]] = (None,),
                  window_scale: Sequence[float] = (1.0,)) \
         -> list[PolicyKnobs]:
-    """Cross product of the §6.5 sensitivity knobs into a flat knob
-    grid: ``sa_width`` outermost, then ``window_scale``, then
+    """Thin shim over ``KnobGrid(...).product()`` (the kwargs spelling
+    predates ISSUE 7): crosses the §6.5 sensitivity knobs into a flat
+    knob grid — ``sa_width`` outermost, then ``window_scale``, then
     delay-major as before (``delay_scale``, ``leak_off_logic``,
     ``leak_sram_sleep``, ``leak_sram_off`` innermost). ``None`` leaves
     a knob at the per-NPU Table 3 default (``sa_width=None`` → the
     generation's native width)."""
-    return [PolicyKnobs(delay_scale=d, leak_off_logic=lo,
-                        leak_sram_sleep=ls, leak_sram_off=lf,
-                        sa_width=sw, window_scale=w)
-            for sw in sa_width for w in window_scale
-            for d in delay_scale
-            for lo in leak_off_logic for ls in leak_sram_sleep
-            for lf in leak_sram_off]
+    return KnobGrid(delay_scale=delay_scale,
+                    leak_off_logic=leak_off_logic,
+                    leak_sram_sleep=leak_sram_sleep,
+                    leak_sram_off=leak_sram_off, sa_width=sa_width,
+                    window_scale=window_scale).product()
 
 
 def sweep_grid(workloads: Sequence[Workload] | Workload,
                npus: Iterable[NPUSpec | str] = ("NPU-D",),
                policies: Iterable[str] = POLICIES, *,
+               grid: Optional[KnobGrid] = None,
                delay_scale: Sequence[float] = (1.0,),
                leak_off_logic: Sequence[Optional[float]] = (None,),
                leak_sram_sleep: Sequence[Optional[float]] = (None,),
@@ -137,17 +135,39 @@ def sweep_grid(workloads: Sequence[Workload] | Workload,
     program that shards the knob/pair axes too — the right shape for
     small-suite, huge-grid sweeps. Returns flat records, or the
     ``BatchResult`` cube when ``as_records=False``.
+
+    Since ISSUE 7 the axes are one object: pass ``grid=KnobGrid(...)``.
+    The six axis kwargs remain as a thin shim that constructs the same
+    ``KnobGrid`` (identical knob ordering and records); mixing ``grid``
+    with axis kwargs is rejected.
     """
     if isinstance(workloads, Workload):
         workloads = [workloads]
     if sa_width is None:  # the pre-ISSUE-5 "no width axis" spelling
         sa_width = (None,)
-    knob_grid = knob_product(delay_scale, leak_off_logic,
-                             leak_sram_sleep, leak_sram_off, sa_width,
-                             window_scale)
+    if grid is None:
+        grid = KnobGrid(delay_scale=delay_scale,
+                        leak_off_logic=leak_off_logic,
+                        leak_sram_sleep=leak_sram_sleep,
+                        leak_sram_off=leak_sram_off, sa_width=sa_width,
+                        window_scale=window_scale)
+    else:
+        if not isinstance(grid, KnobGrid):
+            raise TypeError(f"grid must be a KnobGrid, got "
+                            f"{type(grid).__name__}")
+        kwargs_grid = KnobGrid(delay_scale=delay_scale,
+                               leak_off_logic=leak_off_logic,
+                               leak_sram_sleep=leak_sram_sleep,
+                               leak_sram_off=leak_sram_off,
+                               sa_width=sa_width,
+                               window_scale=window_scale)
+        if kwargs_grid != KnobGrid():
+            raise ValueError(
+                "pass the knob axes either as grid=KnobGrid(...) or as "
+                "the legacy axis kwargs, not both")
     npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
     res: BatchResult = evaluate_batch(
-        workloads, npu_specs, tuple(policies), tuple(knob_grid),
+        workloads, npu_specs, tuple(policies), grid,
         backend=backend, jax_mesh=jax_mesh)
     return res.records() if as_records else res
 
@@ -209,7 +229,7 @@ def sweep_robustness(workloads: Sequence[Workload] | Workload,
     """
     from repro.core.ici_topology import lower_collectives
     from repro.core.perturb import perturb_suite, severity_plan
-    from repro.core.slo import runtime_violation_rate
+    from repro.core.slo import retune_knobs, runtime_violation_rate
     if isinstance(workloads, Workload):
         workloads = [workloads]
     workloads = list(workloads)
@@ -229,10 +249,11 @@ def sweep_robustness(workloads: Sequence[Workload] | Workload,
         variants.extend(perturb_suite(
             base, severity_plan(sev), seed=seed, stream=si,
             names=[f"{wl.name}@s{si}" for wl in base]))
+    thr_grid = KnobGrid(window_scale=threshold_scales)
     res: BatchResult = evaluate_batch(
-        variants, npu_specs, pols,
-        tuple(PolicyKnobs(window_scale=t) for t in threshold_scales),
+        variants, npu_specs, pols, thr_grid,
         backend=backend, jax_mesh=jax_mesh)
+    thr_knobs = thr_grid.product()
 
     rt = res.runtime_s                       # (S*W, A, P, T)
     tot = np.zeros_like(rt)
@@ -257,20 +278,13 @@ def sweep_robustness(workloads: Sequence[Workload] | Workload,
                 # SLO-feasible set per workload: perturbed runtime vs
                 # the SAME threshold's clean runtime
                 r_clean = rt[:w_n, ai, pi, :]                  # (W, T)
-                feas = r_s <= slo_relax * r_clean
                 # chosen threshold: the deployed one while feasible;
                 # past the SLO, the cheapest feasible (or the
-                # least-violating when nothing is feasible)
-                kchos = kstar.copy()
-                for wi in range(w_n):
-                    if feas[wi, kstar[wi]]:
-                        continue
-                    if feas[wi].any():
-                        cand = np.flatnonzero(feas[wi])
-                        kchos[wi] = cand[np.argmin(e_s[wi, cand])]
-                    else:
-                        kchos[wi] = int(np.argmin(r_s[wi]
-                                                  / r_clean[wi]))
+                # least-violating when nothing is feasible) — the
+                # shared operator rule (slo.retune_knobs, also the
+                # fleet governor)
+                kchos = retune_knobs(e_s, r_s, slo_relax * r_clean,
+                                     deployed=kstar)
                 regret = e_s[wi_ix, kchos] - opt
                 regret_frac = regret / np.maximum(opt, 1e-300)
                 viol = runtime_violation_rate(
@@ -294,7 +308,10 @@ def sweep_robustness(workloads: Sequence[Workload] | Workload,
                         records.append({
                             "workload": wl.name, "npu": npu.name,
                             "policy": policy, "severity": sev,
-                            "window_scale": ts,
+                            # full knob columns (knob_idx + every
+                            # KnobGrid axis) so these records feed
+                            # with_savings/group_by like any sweep's
+                            **knob_columns(thr_knobs[ki], ki),
                             "runtime_s": float(r_s[wi, ki]),
                             "total_j": float(e_s[wi, ki]),
                             "exposed_wake_s": float(x_s[wi, ki]),
@@ -350,6 +367,18 @@ def sweep_program_plane(workloads: Sequence[Workload] | Workload,
             for wl in workloads for npu in npu_specs]
 
 
+def sweep_fleet(scenario, knob_grid=None, **kw):
+    """Fleet serving plane (ISSUE 7): simulate a chip fleet serving
+    seeded request-arrival traces, one batched ``evaluate_batch`` call
+    per epoch, with the online SLO governor switching ``PolicyKnobs``
+    and ``core.carbon`` rolling per-chip joules up to fleet
+    kWh/CO2/cost. Thin re-export of ``repro.core.fleet.sweep_fleet``
+    (imported lazily — ``fleet`` builds on this module's substrate);
+    see that module for the scenario/report data model."""
+    from repro.core.fleet import sweep_fleet as impl
+    return impl(scenario, knob_grid, **kw)
+
+
 def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     """Attach ``savings`` (1 - total_j/baseline_total_j) to each record,
     in one bulk pass over the batched record table.
@@ -370,13 +399,15 @@ def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     def eff_width(r):
         """Record's effective SA width: ``None`` (native) and the
         explicitly spelled native width are the same configuration."""
-        w = r.get("sa_width")
+        w = r["sa_width"]
         if w is not None:
             return w
         try:
             return get_npu(r["npu"]).sa_width
         except KeyError:  # ad-hoc spec name: compare the raw value
             return None
+
+    _require_knob_columns(records, "with_savings")
 
     base: dict[tuple, float] = {}
     per_cell: dict[tuple, list[tuple]] = {}
@@ -400,9 +431,33 @@ def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     return out
 
 
+def _require_knob_columns(records: list[dict], caller: str) -> None:
+    """Record-table consumers key on the knob columns; a record missing
+    one (e.g. hand-built before ISSUE 7 unified emission) would silently
+    mis-baseline or mis-group, so fail loudly naming the gap."""
+    need = ("knob_idx",) + KnobGrid.columns()
+    for i, r in enumerate(records):
+        missing = [k for k in need if k not in r]
+        if missing:
+            raise ValueError(
+                f"{caller}: record {i} "
+                f"({r.get('workload')!r}/{r.get('policy')!r}) is "
+                f"missing knob column(s) {missing}; every sweep record "
+                f"carries {need} — rebuild the table with a "
+                f"post-ISSUE-7 sweep, or fill the defaults explicitly")
+
+
 def group_by(records: list[dict], *keys: str) -> dict[tuple, list[dict]]:
-    """Group records by the given columns, preserving record order."""
+    """Group records by the given columns, preserving record order.
+    A record missing one of ``keys`` fails loudly (records from any
+    sweep entry point carry every knob column unconditionally)."""
     out: dict[tuple, list[dict]] = {}
-    for r in records:
-        out.setdefault(tuple(r[k] for k in keys), []).append(r)
+    for i, r in enumerate(records):
+        try:
+            out.setdefault(tuple(r[k] for k in keys), []).append(r)
+        except KeyError as e:
+            raise KeyError(
+                f"group_by: record {i} ({r.get('workload')!r}/"
+                f"{r.get('policy')!r}) has no column {e.args[0]!r}; "
+                f"available: {sorted(r)}") from None
     return out

@@ -4,10 +4,18 @@ Serves a reduced-config model on CPU end-to-end (examples/serve_batched.py
 drives it); the same step functions lower on the production meshes in the
 dry-run. Continuous-batching style: a request joins at the next decode
 step boundary; all requests share one cache of max_seq slots.
+
+``--arrivals`` switches to arrival-driven serving: a seeded request
+trace from the fleet plane's generators (``repro.core.fleet`` — the
+same Poisson/diurnal/bursty processes that drive the 4k-chip
+simulator) feeds the server epoch by epoch, requests joining at the
+next epoch boundary and queuing until a full batch forms — the fleet
+simulator's binning rule exercised at single-server scale.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
@@ -77,17 +85,79 @@ class Server:
         return np.stack(out, axis=1)  # (B, n_tokens)
 
 
+def serve_arrivals(srv: Server, spec, *, duration_s: float,
+                   epoch_s: float, prompt_len: int, n_tokens: int,
+                   seed: int = 0) -> list[dict]:
+    """Serve a seeded arrival trace with epoch-boundary batching.
+
+    ``spec`` is a ``repro.core.fleet.ArrivalSpec``; its per-epoch
+    request counts (fixed-draw-count generators, deterministic under
+    ``seed``) land on the queue at each epoch boundary, and the server
+    drains the queue in full ``srv.batch``-sized waves — the remainder
+    carries to the next epoch, exactly how the fleet simulator bins
+    requests into epochs. Returns one stats dict per epoch.
+    """
+    from repro.core.fleet import arrival_counts
+    n_epochs = max(1, int(math.ceil(duration_s / epoch_s)))
+    rng = np.random.default_rng(seed)
+    counts = arrival_counts(spec, n_epochs, epoch_s, rng)
+    queue = 0
+    stats = []
+    for e in range(n_epochs):
+        queue += int(counts[e])
+        served = 0
+        t0 = time.time()
+        while queue >= srv.batch:
+            prompts = rng.integers(0, srv.cfg.vocab_size,
+                                   (srv.batch, prompt_len),
+                                   dtype=np.int32)
+            srv.generate(prompts, n_tokens)
+            queue -= srv.batch
+            served += srv.batch
+        stats.append({"epoch": e, "arrived": int(counts[e]),
+                      "served": served, "queued": queue,
+                      "wall_s": time.time() - t0})
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--arrivals", choices=("poisson", "diurnal",
+                                           "bursty"), default=None,
+                    help="serve a seeded arrival trace (fleet-plane "
+                         "generators) instead of one fixed batch")
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="mean arrival rate, requests/s")
+    ap.add_argument("--duration", type=float, default=30.0,
+                    help="arrival-trace window, seconds")
+    ap.add_argument("--epoch", type=float, default=5.0,
+                    help="batching epoch length, seconds")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     with use_rules(BASELINE):
         srv = Server(args.arch, batch=args.batch,
                      max_seq=args.prompt_len + args.tokens + 8)
-        rng = np.random.default_rng(0)
+        if args.arrivals:
+            from repro.core.fleet import ArrivalSpec
+            spec = ArrivalSpec(args.arrivals, rate_rps=args.rate,
+                               period_s=args.duration)
+            stats = serve_arrivals(srv, spec, duration_s=args.duration,
+                                   epoch_s=args.epoch,
+                                   prompt_len=args.prompt_len,
+                                   n_tokens=args.tokens, seed=args.seed)
+            for s in stats:
+                print(f"[serve] epoch {s['epoch']}: arrived "
+                      f"{s['arrived']}, served {s['served']}, queued "
+                      f"{s['queued']} ({s['wall_s']:.2f}s)")
+            tot = sum(s["served"] for s in stats)
+            print(f"[serve] {tot} requests served over "
+                  f"{len(stats)} epochs")
+            return
+        rng = np.random.default_rng(args.seed)
         prompts = rng.integers(0, srv.cfg.vocab_size,
                                (args.batch, args.prompt_len), dtype=np.int32)
         t0 = time.time()

@@ -32,9 +32,15 @@ def test_output_structure(out):
     assert len(out["summary"]) == 1 * 1 * len(SEVS)
     assert len(out["records"]) == len(WLS) * 1 * 1 * len(SEVS) * len(TS)
     r = out["records"][0]
+    # since ISSUE 7 every sweep record carries the full knob-column set
+    # (KnobGrid.columns() + knob_idx) unconditionally
+    from repro.core.policies import KnobGrid
     assert set(r) == {"workload", "npu", "policy", "severity",
-                      "window_scale", "runtime_s", "total_j",
+                      "knob_idx", *KnobGrid.columns(),
+                      "runtime_s", "total_j",
                       "exposed_wake_s", "deployed", "chosen"}
+    assert r["knob_idx"] == 0 and r["delay_scale"] == 1.0
+    assert r["window_scale"] == TS[0]
 
 
 def test_severity_zero_is_null(out):
