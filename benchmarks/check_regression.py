@@ -33,6 +33,7 @@ DEFAULT_PAIRS = [
     "BENCH_sweep_multidevice.json:BENCH_sweep_multidevice.new.json",
     "BENCH_perturb.json:BENCH_perturb.new.json",
     "BENCH_fleet.json:BENCH_fleet.new.json",
+    "BENCH_chaos.json:BENCH_chaos.new.json",
 ]
 
 

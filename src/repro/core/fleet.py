@@ -61,14 +61,20 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.carbon import FleetRollup, fleet_rollup
+from repro.core.faults import (FaultSpec, FaultTimeline,
+                               build_fault_timeline, fault_plan)
 from repro.core.hw import NPUSpec, get_npu
+from repro.core.ici_topology import (lower_collectives, n_links,
+                                     resolve_link_rates, topology_for)
 from repro.core.opgen import Workload
-from repro.core.perturb import _require_rng, severity_variants
+from repro.core.perturb import (_require_rng, perturb_suite,
+                                severity_plan, severity_variants)
 from repro.core.policies import (POLICIES, BatchResult, PolicyKnobs,
                                  as_knob_tuple, evaluate_batch,
                                  knob_columns)
 from repro.core.power import COMPONENTS, PowerModel
-from repro.core.slo import retune_knobs, runtime_violation_rate
+from repro.core.slo import (GovernorState, Hysteresis, retune_knobs,
+                            runtime_violation_rate)
 
 ARRIVAL_KINDS = ("poisson", "diurnal", "bursty", "replay")
 
@@ -181,14 +187,23 @@ def arrival_counts(spec: ArrivalSpec, n_epochs: int, epoch_s: float,
     return rng.poisson(lam).astype(np.int64)
 
 
-def bin_requests(times_s: np.ndarray, n_epochs: int,
-                 epoch_s: float) -> np.ndarray:
+def bin_requests(times_s: np.ndarray, n_epochs: int, epoch_s: float, *,
+                 with_clamped: bool = False):
     """Bin arrival timestamps into serving epochs with the
     continuous-batching rule of ``launch/serve.py``: a request joins
     the batch at the *next* epoch boundary (an arrival strictly inside
     epoch e is served in epoch e+1; one exactly on a boundary joins the
     epoch that starts there). Arrivals in the final epoch clamp into
-    the final epoch — the fleet has no epoch e+1 to defer to."""
+    the final epoch — the fleet has no epoch e+1 to defer to.
+
+    That clamp used to be silent; with ``with_clamped=True`` the return
+    is ``(counts, clamped)`` where ``clamped`` counts the arrivals
+    whose next-boundary rule pointed at or past the horizon (i.e. they
+    were folded back into the final epoch instead of deferring).
+    ``sweep_fleet`` surfaces the total as
+    ``FleetReport.clamped_requests``. Timestamps strictly past the
+    window still raise.
+    """
     t = np.asarray(times_s, np.float64)
     if t.size and (not np.isfinite(t).all() or (t < 0).any()):
         raise ValueError("replay times_s must be finite and >= 0")
@@ -196,8 +211,11 @@ def bin_requests(times_s: np.ndarray, n_epochs: int,
         raise ValueError(
             f"replay times_s exceed the scenario window "
             f"({n_epochs} x {epoch_s}s)")
-    idx = np.minimum(np.ceil(t / epoch_s).astype(np.int64), n_epochs - 1)
-    return np.bincount(idx, minlength=n_epochs).astype(np.int64)
+    raw = np.ceil(t / epoch_s).astype(np.int64)
+    clamped = int((raw >= n_epochs).sum())
+    idx = np.minimum(raw, n_epochs - 1)
+    counts = np.bincount(idx, minlength=n_epochs).astype(np.int64)
+    return (counts, clamped) if with_clamped else counts
 
 
 # --------------------------------------------------------------------------
@@ -245,6 +263,11 @@ class FleetScenario:
     slo_relax: float = 1.2
     seed: int = 0
     severity_levels: tuple[float, ...] = (0.0,)
+    # graceful-degradation ladder, first rung: when a class's backlog
+    # exceeds this multiple of its per-epoch capacity, the excess is
+    # SHED (refused) instead of queued — inf (default) never sheds,
+    # which keeps the backlog dynamics exactly as before
+    shed_backlog_x: float = math.inf
 
     def __post_init__(self):
         object.__setattr__(self, "classes", tuple(self.classes))
@@ -269,6 +292,9 @@ class FleetScenario:
                              f"{self.slo_relax!r}")
         if not self.severity_levels:
             raise ValueError("severity_levels must be non-empty")
+        if math.isnan(self.shed_backlog_x) or self.shed_backlog_x <= 0:
+            raise ValueError(f"shed_backlog_x must be > 0 (inf = never "
+                             f"shed), got {self.shed_backlog_x!r}")
 
     @property
     def n_epochs(self) -> int:
@@ -303,6 +329,12 @@ class FleetReport:
     records: list[dict] = field(default_factory=list)
     epoch_summary: list[dict] = field(default_factory=list)
     summary: list[dict] = field(default_factory=list)
+    # replay arrivals folded into the final epoch by the next-boundary
+    # rule (see bin_requests) — surfaced, not silently clamped
+    clamped_requests: int = 0
+    clamped_by_class: dict = field(default_factory=dict)
+    # chaos plane: present only when a fault timeline was injected
+    fault_summary: Optional[dict] = None
     # (workload variants, severity level) per epoch — populated only
     # with keep_epoch_inputs=True so tests can replay one epoch as a
     # hand-built sweep_grid/evaluate_batch call
@@ -363,6 +395,18 @@ def _severity_index(demand: np.ndarray, n_levels: int) -> np.ndarray:
     return (order * n_levels // max(1, len(demand))).astype(np.int64)
 
 
+# cross-call memo for faulted trace variants: value-keyed buckets on
+# (class workloads, scenario seed, severity levels), each mapping
+# (link-rate row bytes, level index) -> variant list — so replaying
+# one timeline through several sweep_fleet calls (chaos campaign
+# hysteresis + baseline runs, benchmark repetitions) returns the SAME
+# Workload objects and the identity-cached compile/stack pipeline
+# stays warm across calls; both levels clear wholesale at the cap
+# (distinct link states per campaign number in the dozens)
+_FAULT_VARIANTS: dict = {}
+_FAULT_VARIANTS_CAP = 4096
+
+
 def _idle_power_w(pm: PowerModel, policy: str) -> float:
     """Out-of-epoch-load idle power per chip: NoPG chips sit at full
     idle power, ReGate chips deep-idle with everything gateable gated,
@@ -376,7 +420,9 @@ def _idle_power_w(pm: PowerModel, policy: str) -> float:
 
 def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                 backend: Optional[str] = None, jax_mesh=None,
-                keep_epoch_inputs: bool = False) -> FleetReport:
+                keep_epoch_inputs: bool = False,
+                faults: Optional[FaultTimeline] = None,
+                hysteresis: Optional[Hysteresis] = None) -> FleetReport:
     """Run the fleet simulation; see the module docstring for the
     model. ``knob_grid`` accepts a ``KnobGrid``, a flat sequence of
     ``PolicyKnobs``, or ``None`` (the single default point) —
@@ -384,6 +430,27 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     / ``jax_mesh`` resolve through the active ``SweepSession`` when
     ``None``. Deterministic: the same scenario (same seed) produces a
     bit-identical report.
+
+    ``faults`` injects a ``core.faults.FaultTimeline`` (chaos plane):
+    per epoch, ``chips_down`` shrinks the allocatable fleet (failover
+    re-runs the largest-remainder apportionment over the survivors,
+    backlog carries through the capacity dip), link faults re-lower
+    every class's collectives onto fault-paced step schedules
+    (``ici_topology.collective_schedule`` with the epoch's link-rate
+    row, partition-resolved via ``resolve_link_rates``), the epoch's
+    ``severity_hint`` escalates the traffic-severity ladder, and
+    ``pg_fault`` epochs drop gated policies to their NoPG-equivalent
+    evaluation (the degradation ladder's last rung: gating logic
+    can't be trusted, so nothing gates and idle burns ungated). The
+    all-clean timeline is an exact no-op. ``scenario.shed_backlog_x``
+    (finite) adds the shed rung: backlog beyond that multiple of an
+    epoch's capacity is refused, not queued.
+
+    ``hysteresis`` switches the governor to the stateful anti-thrash
+    rule (``slo.retune_knobs`` with a ``GovernorState`` per policy):
+    knobs persist across epochs, retunes respect cooldown/backoff, and
+    the per-policy retune count is bounded by the number of fault
+    transitions in piecewise-constant scenarios.
     """
     knobs = as_knob_tuple(knob_grid)
     n_k = len(knobs)
@@ -396,23 +463,112 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     pm = PowerModel(npu)
     idle_w = np.array([_idle_power_w(pm, p) for p in pols])
 
+    ft = faults
+    if ft is not None:
+        if not isinstance(ft, FaultTimeline):
+            raise ValueError(
+                f"faults must be a core.faults.FaultTimeline, "
+                f"got {type(ft)}")
+        if int(ft.n_epochs) != n_e:
+            raise ValueError(
+                f"fault timeline covers {ft.n_epochs} epochs, scenario "
+                f"has {n_e}")
+        if int(ft.n_chips) != int(scenario.n_chips):
+            raise ValueError(
+                f"fault timeline was built for {ft.n_chips} chips, "
+                f"scenario has {scenario.n_chips}")
+    if hysteresis is not None and not isinstance(hysteresis, Hysteresis):
+        raise ValueError(
+            f"hysteresis must be a slo.Hysteresis, got {type(hysteresis)}")
+
     # --- arrivals: per-class counts, (W, E) --------------------------
     counts = np.zeros((n_w, n_e), np.int64)
+    clamped_by_class: dict[str, int] = {}
     for ci, cls in enumerate(classes):
         rng = np.random.default_rng((int(scenario.seed), ci))
         counts[ci] = arrival_counts(cls.arrivals, n_e, dt, rng)
+        if cls.arrivals.kind == "replay":
+            _, ncl = bin_requests(np.asarray(cls.arrivals.times_s),
+                                  n_e, dt, with_clamped=True)
+            if ncl:
+                clamped_by_class[cls.name] = ncl
     requests_total = int(counts.sum())
     rpi = np.array([c.requests_per_invocation for c in classes])
     wl_chips = np.array([max(1, c.workload.n_chips) for c in classes],
                         np.float64)
 
     # --- traffic variability: one variant set per severity level -----
+    # With link faults anywhere in the window, ALL epochs (clean ones
+    # too) run on topology-lowered traces, so faulted epochs differ
+    # from clean ones purely by their link-rate pacing — and a
+    # timeline with no link events changes nothing at all.
     base = [c.workload for c in classes]
     levels = scenario.severity_levels
+    chaos_links = ft is not None and ft.has_link_faults
+    if chaos_links:
+        topos = [topology_for(max(1, wl.n_chips)) for wl in base]
+        for cls, tp in zip(classes, topos):
+            need = n_links(tp)
+            if need > int(ft.n_links):
+                raise ValueError(
+                    f"fault timeline has {ft.n_links} links but class "
+                    f"{cls.name!r} ({tp.kind}{tp.shape}) needs {need}")
+        base = [lower_collectives(wl, tp)
+                for wl, tp in zip(base, topos)]
     variants = severity_variants(base, levels, seed=scenario.seed)
     by_level = [variants[lv] for lv in levels]
     sev_ix = _severity_index(counts.sum(axis=0).astype(np.float64),
                              len(levels))
+    if ft is not None and len(levels) > 1:
+        # fault-state severity escalation: the epoch's severity hint
+        # (0 clean, ~1 severe) lifts it at least that far up the
+        # scenario's level ladder — clean epochs are untouched
+        hint_ix = np.ceil(np.minimum(ft.severity_hint, 1.0)
+                          * (len(levels) - 1)).astype(np.int64)
+        sev_ix = np.maximum(sev_ix, hint_ix)
+    # per-epoch faulted trace variants, cached by (link-rate row,
+    # severity level) so flapping timelines revisit cached objects and
+    # the identity-keyed compile/stack pipeline stays warm; a
+    # value-keyed second level (_FAULT_VARIANTS) survives across
+    # sweep_fleet calls, so a chaos campaign replaying the same
+    # timeline (hysteresis run + thrash baseline, bench repetitions)
+    # re-lowers and re-compiles each distinct link state only once
+    fault_variants: dict = {}
+    if chaos_links:
+        # ONE value-keyed (hence Workload-hashing) lookup per call;
+        # per-epoch lookups below then key on cheap bytes tuples only
+        if len(_FAULT_VARIANTS) >= _FAULT_VARIANTS_CAP:
+            _FAULT_VARIANTS.clear()
+        shared = _FAULT_VARIANTS.setdefault(
+            (tuple(c.workload for c in classes), int(scenario.seed),
+             tuple(levels)), {})
+
+    def epoch_workloads(e: int) -> list[Workload]:
+        si = int(sev_ix[e])
+        if not (chaos_links and ft.link_faulty(e)):
+            return by_level[si]
+        key = (ft.link_rates[e].tobytes(), si)
+        wls = fault_variants.get(key)
+        if wls is None:
+            wls = shared.get(key)
+        if wls is None:
+            low = [lower_collectives(
+                wl, tp, link_rates=resolve_link_rates(
+                    ft.link_rates[e][:n_links(tp)], tp))
+                for wl, tp in zip([c.workload for c in classes], topos)]
+            # same (seed, stream=si, index) children as
+            # severity_variants: a faulted epoch's jitter draws match
+            # its clean sibling draw-for-draw, so the only delta is
+            # the link pacing itself
+            wls = perturb_suite(
+                low, severity_plan(float(levels[si])),
+                seed=scenario.seed, stream=si,
+                names=[f"{wl.name}@sev{si}" for wl in low])
+            if len(shared) >= _FAULT_VARIANTS_CAP:
+                shared.clear()
+            shared[key] = wls
+        fault_variants[key] = wls
+        return wls
 
     # --- governor calibration: clean-trace reference runtimes --------
     # (one extra batched call outside the epoch loop; the SLO bound per
@@ -423,6 +579,22 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     rt_cal = cal.runtime_s[:, 0, :, :]                    # (W, P, K)
     slo_bound = scenario.slo_relax * rt_cal.min(axis=2)   # (W, P)
 
+    # --- pg-fault fallback: gated policies need the NoPG row ---------
+    eval_pols = pols
+    if ft is not None and ft.has_pg_faults and "NoPG" not in pols:
+        eval_pols = pols + ("NoPG",)
+    nopg_ix = eval_pols.index("NoPG") if "NoPG" in eval_pols else None
+
+    # --- stateful governor: deployed knobs persist across epochs -----
+    gov_states: Optional[list[GovernorState]] = None
+    dep_now: Optional[np.ndarray] = None
+    if hysteresis is not None:
+        gov_states = [GovernorState.init(n_w, hysteresis) for _ in pols]
+        cal_tot = np.zeros((n_w, n_p, n_k))
+        for c in COMPONENTS:
+            cal_tot += cal.static_j[c][:, 0] + cal.dynamic_j[c][:, 0]
+        dep_now = np.argmin(cal_tot, axis=2)              # (W, P)
+
     report = FleetReport(
         n_epochs=n_e, epoch_s=dt, n_chips=scenario.n_chips,
         npu=npu.name, policies=pols,
@@ -430,34 +602,50 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
         severity_levels=levels,
         severity_by_epoch=[float(levels[i]) for i in sev_ix],
         requests_total=requests_total,
+        clamped_requests=sum(clamped_by_class.values()),
+        clamped_by_class=clamped_by_class,
         epoch_inputs=[] if keep_epoch_inputs else None)
 
     backlog = np.zeros((n_w, n_p))
     eff_hist = np.zeros((n_e, n_w, n_p))
+    shed_on = math.isfinite(scenario.shed_backlog_x)
     for e in range(n_e):
-        wls = by_level[sev_ix[e]]
+        wls = epoch_workloads(e)
         # ONE batched sweep call per epoch: the whole active
         # (workload-mix x npu x policy x knob) grid in one pass
-        res: BatchResult = evaluate_batch(wls, (npu,), pols, knobs,
+        res: BatchResult = evaluate_batch(wls, (npu,), eval_pols, knobs,
                                           backend=backend,
                                           jax_mesh=jax_mesh)
         if keep_epoch_inputs:
             report.epoch_inputs.append((wls, float(levels[sev_ix[e]])))
-        rt = res.runtime_s[:, 0, :, :]                    # (W, P, K)
+        rt = res.runtime_s[:, 0, :, :]                    # (W, P', K)
         tot = np.zeros_like(rt)
         for c in COMPONENTS:
             tot += res.static_j[c][:, 0] + res.dynamic_j[c][:, 0]
+        down = int(ft.chips_down[e]) if ft is not None else 0
+        avail = max(0, scenario.n_chips - down)
+        pg_now = ft is not None and bool(ft.pg_fault[e])
+        link_now = chaos_links and ft.link_faulty(e)
 
         for pi, policy in enumerate(pols):
-            e_pk, r_pk = tot[:, pi, :], rt[:, pi, :]      # (W, K)
-            deployed = np.argmin(e_pk, axis=1)
+            # pg-fault ladder rung: a gated policy's power-gating
+            # control logic is compromised this epoch — it runs (and
+            # idles) at the ungated NoPG operating point
+            pg_fb = pg_now and policy not in ("NoPG", "Ideal")
+            src = nopg_ix if pg_fb else pi
+            e_pk, r_pk = tot[:, src, :], rt[:, src, :]    # (W, K)
+            idle_w_pi = pm.idle_chip_w if pg_fb else idle_w[pi]
+            deployed = np.argmin(e_pk, axis=1) if dep_now is None \
+                else dep_now[:, pi]
             demand_inv = counts[:, e] / rpi + backlog[:, pi]
             wi = np.arange(n_w)
             # allocation: proportional to demand chip-time at the
             # deployed knob (the governor re-tunes knobs after chips
-            # are placed — placement reacts to demand, not to knobs)
+            # are placed — placement reacts to demand, not to knobs);
+            # failed/draining chips are out of the pool, so failover
+            # re-apportions the survivors with the no-starvation floor
             dct = demand_inv * r_pk[wi, deployed] * wl_chips
-            chips = _allocate_chips(scenario.n_chips, dct)
+            chips = _allocate_chips(avail, dct)
             # queueing inflation: load factor rho per knob; a class
             # past its capacity stretches completion proportionally
             with np.errstate(divide="ignore", invalid="ignore"):
@@ -467,25 +655,49 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                            np.where(chips[:, None] > 0, rho, np.inf),
                            0.0)
             eff = r_pk * np.maximum(1.0, rho)             # (W, K)
-            chosen = retune_knobs(e_pk, eff,
-                                  slo_bound[:, pi][:, None],
-                                  deployed=deployed)
-            feas_any = (eff <= slo_bound[:, pi][:, None]).any(axis=1)
+            if gov_states is None:
+                chosen = retune_knobs(e_pk, eff,
+                                      slo_bound[:, pi][:, None],
+                                      deployed=deployed)
+            else:
+                chosen = retune_knobs(e_pk, eff,
+                                      slo_bound[:, pi][:, None],
+                                      deployed=deployed,
+                                      hysteresis=hysteresis,
+                                      state=gov_states[pi])
+                dep_now[:, pi] = chosen
+            feas = eff <= slo_bound[:, pi][:, None]
+            feas_any = feas.any(axis=1)
             eff_c = eff[wi, chosen]
             violated = eff_c > slo_bound[:, pi]
             eff_hist[e, :, pi] = eff_c
+            # SLO-constrained regret: chosen knob's invocation energy
+            # vs the cheapest feasible knob this epoch (cheapest
+            # overall when nothing is feasible)
+            opt_j = np.where(
+                feas_any,
+                np.min(np.where(feas, e_pk, np.inf), axis=1),
+                e_pk.min(axis=1))
+            regret = e_pk[wi, chosen] / np.maximum(opt_j, 1e-300) - 1.0
             # service: capacity at the chosen knob, backlog carries
             r_c = r_pk[wi, chosen]
             cap_inv = np.where(r_c > 0,
                                chips * dt / (r_c * wl_chips), 0.0)
             served = np.minimum(demand_inv, cap_inv)
             backlog[:, pi] = demand_inv - served
+            shed = np.zeros(n_w)
+            if shed_on:
+                # degradation ladder, first rung: refuse backlog
+                # beyond shed_backlog_x x this epoch's capacity
+                limit = scenario.shed_backlog_x * cap_inv
+                shed = np.maximum(0.0, backlog[:, pi] - limit)
+                backlog[:, pi] -= shed
             busy_s = np.minimum(served * r_c * wl_chips, chips * dt)
             idle_s = np.maximum(0.0, chips * dt - busy_s)
             busy_j = served * e_pk[wi, chosen] * wl_chips
-            idle_j = idle_w[pi] * idle_s
-            spare = scenario.n_chips - int(chips.sum())
-            unalloc_j = idle_w[pi] * spare * dt
+            idle_j = idle_w_pi * idle_s
+            spare = avail - int(chips.sum())
+            unalloc_j = idle_w_pi * spare * dt
             for ci, cls in enumerate(classes):
                 report.records.append({
                     "epoch": e, "class": cls.name,
@@ -499,6 +711,7 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                     "demand_inv": float(demand_inv[ci]),
                     "served_inv": float(served[ci]),
                     "backlog_inv": float(backlog[ci, pi]),
+                    "shed_inv": float(shed[ci]),
                     "chips": int(chips[ci]),
                     "runtime_s": float(r_c[ci]),
                     # the underlying sweep cell's per-chip energy at
@@ -506,11 +719,14 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                     # fleet record back to the direct sweep_grid
                     # record it was derived from
                     "inv_total_j": float(e_pk[ci, chosen[ci]]),
+                    "inv_opt_j": float(opt_j[ci]),
+                    "regret_frac": float(regret[ci]),
                     "eff_runtime_s": float(eff_c[ci]),
                     "slo_bound_s": float(slo_bound[ci, pi]),
                     "slo_violated": bool(violated[ci]),
                     "feasible_exists": bool(feas_any[ci]),
                     "retuned": bool(chosen[ci] != deployed[ci]),
+                    "pg_fallback": bool(pg_fb),
                     "utilization": float(busy_s[ci]
                                          / max(chips[ci] * dt, 1e-300))
                     if chips[ci] else 0.0,
@@ -523,8 +739,12 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                 "severity": float(levels[sev_ix[e]]),
                 "requests": int(counts[:, e].sum()),
                 "served_inv": float(served.sum()),
+                "shed_inv": float(shed.sum()),
                 "chips_active": int(chips.sum()),
+                "chips_down": down,
                 "chips_unallocated": spare,
+                "pg_fallback": bool(pg_fb),
+                "link_faulted": bool(link_now),
                 "unallocated_idle_j": float(unalloc_j),
                 "busy_j": float(busy_j.sum()),
                 "idle_j": float(idle_j.sum() + unalloc_j),
@@ -564,5 +784,145 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                 eff_hist[:, :, pi], base_rt, scenario.slo_relax),
             "retunes": sum(s["retunes"] for s in eps),
             "j_per_request": total_j / max(1.0, served_req),
+            "shed_inv_total": math.fsum(r["shed_inv"] for r in recs),
+            "worst_regret_frac": max(
+                (r["regret_frac"] for r in recs), default=0.0),
+            "pg_fallback_epochs": sum(
+                1 for s in eps if s["pg_fallback"]),
         })
+    if ft is not None:
+        af = ft.any_fault()
+        report.fault_summary = {
+            "n_transitions": int(ft.n_transitions),
+            "faulted_epochs": int(af.sum()),
+            "chip_fault_epochs": int((ft.chips_down > 0).sum()),
+            "link_fault_epochs": int(
+                (ft.link_rates != 1.0).any(axis=1).sum()),
+            "pg_fault_epochs": int(ft.pg_fault.sum()),
+            "chips_down_max": int(ft.chips_down.max()),
+            "repair_epochs": ft.repair_epochs(),
+        }
     return report
+
+
+# --------------------------------------------------------------------------
+# the chaos campaign runner
+# --------------------------------------------------------------------------
+
+def _recovery_times(report: FleetReport, timeline: FaultTimeline,
+                    policy: str, regret_tol: float) -> list[int]:
+    """Epochs-to-recover after each repair (fleet returns to fully
+    clean): the first epoch at/after the repair where none of the
+    policy's class records violates the SLO and every record's
+    SLO-constrained regret is within ``regret_tol`` — i.e. the
+    governor is back on (near-)optimal knobs with the queue drained
+    enough to meet the bound. A window that never recovers is censored
+    at the remaining epoch count.
+    """
+    ok = np.ones(report.n_epochs, bool)
+    for r in report.records:
+        if r["policy"] != policy:
+            continue
+        if r["slo_violated"] or r["regret_frac"] > regret_tol:
+            ok[r["epoch"]] = False
+    out = []
+    for r0 in timeline.repair_epochs():
+        rec = next((e for e in range(r0, report.n_epochs) if ok[e]),
+                   None)
+        out.append((rec - r0) if rec is not None
+                   else report.n_epochs - r0)
+    return out
+
+
+def sweep_chaos(scenario: FleetScenario, knob_grid=None, *,
+                fault_severities: Sequence[float] = (0.0, 1.0, 2.0),
+                hysteresis: Optional[Hysteresis] = None,
+                thrash_baseline: bool = True,
+                recovery_regret_tol: float = 0.05,
+                backend: Optional[str] = None, jax_mesh=None) -> dict:
+    """The chaos campaign: seeded fault scenarios × severities ×
+    policies through the fleet simulator.
+
+    For each severity the canonical ``faults.fault_plan`` spec is
+    realized into a timeline seeded ``(scenario.seed, bits(severity))``
+    (the severity's own float64 bit pattern, NOT its list position) —
+    per-(chip, link) child streams inside — so scenarios never share
+    or shift each other's fault draws: adding or removing a severity
+    from the campaign leaves every other severity's timeline
+    bit-identical, and ``sweep_fleet`` replays it
+    under the anti-thrash hysteresis governor (each epoch still
+    exactly one ``evaluate_batch`` call). With ``thrash_baseline``
+    (default) every faulted scenario is also run under the stateless
+    governor, the thrashing control the anti-thrash invariant is
+    measured against.
+
+    Returns ``{"summary": [per (severity, policy) rows], "reports",
+    "baseline_reports", "timelines", ...}`` where each summary row
+    carries the campaign metrics: worst/mean SLO-constrained regret,
+    recovery time after repair (see ``_recovery_times``), retune
+    counts vs the fault-transition bound and vs the thrash baseline,
+    violation rate, shed volume, and energy/carbon totals.
+    Deterministic: same scenario seed → bit-identical campaign.
+    """
+    sevs = tuple(float(s) for s in fault_severities)
+    if not sevs:
+        raise ValueError("fault_severities must be non-empty")
+    if len(set(sevs)) != len(sevs):
+        raise ValueError(f"duplicate fault severities: {sevs}")
+    if not (math.isfinite(recovery_regret_tol)
+            and recovery_regret_tol >= 0):
+        raise ValueError(f"recovery_regret_tol must be >= 0, got "
+                         f"{recovery_regret_tol!r}")
+    hys = hysteresis if hysteresis is not None else Hysteresis()
+    if not isinstance(hys, Hysteresis):
+        raise ValueError(f"hysteresis must be a slo.Hysteresis, "
+                         f"got {type(hys)}")
+    # the link plane covers the largest per-class topology; smaller
+    # classes read a prefix of each epoch's link-rate row
+    lmax = max(n_links(topology_for(max(1, c.workload.n_chips)))
+               for c in scenario.classes)
+    out: dict = {"fault_severities": sevs, "policies": scenario.policies,
+                 "seed": int(scenario.seed), "hysteresis": hys,
+                 "summary": [], "reports": {}, "baseline_reports": {},
+                 "timelines": {}}
+    for sev in sevs:
+        sev_key = int(np.float64(sev + 0.0).view(np.uint64))
+        tl = build_fault_timeline(
+            fault_plan(sev), n_epochs=scenario.n_epochs,
+            n_chips=scenario.n_chips, n_links=lmax,
+            seed=(int(scenario.seed), sev_key))
+        rep = sweep_fleet(scenario, knob_grid, backend=backend,
+                          jax_mesh=jax_mesh, faults=tl, hysteresis=hys)
+        out["reports"][sev] = rep
+        out["timelines"][sev] = tl
+        base = None
+        if thrash_baseline:
+            base = sweep_fleet(scenario, knob_grid, backend=backend,
+                               jax_mesh=jax_mesh, faults=tl,
+                               hysteresis=None)
+            out["baseline_reports"][sev] = base
+        for policy in scenario.policies:
+            ps = rep.policy_summary(policy)
+            recs = [r for r in rep.records if r["policy"] == policy]
+            rts = _recovery_times(rep, tl, policy, recovery_regret_tol)
+            row = {
+                "fault_severity": sev, "policy": policy,
+                "n_transitions": int(tl.n_transitions),
+                "faulted_epochs": int(tl.any_fault().sum()),
+                "retunes": int(ps["retunes"]),
+                "worst_regret_frac": float(ps["worst_regret_frac"]),
+                "mean_regret_frac": float(
+                    np.mean([r["regret_frac"] for r in recs])),
+                "slo_violation_rate": float(ps["slo_violation_rate"]),
+                "recovery_epochs": rts,
+                "recovery_epochs_max": max(rts, default=0),
+                "shed_inv_total": float(ps["shed_inv_total"]),
+                "pg_fallback_epochs": int(ps["pg_fallback_epochs"]),
+                "total_j": float(ps["total_j"]),
+                "j_per_request": float(ps["j_per_request"]),
+            }
+            if base is not None:
+                row["baseline_retunes"] = int(
+                    base.policy_summary(policy)["retunes"])
+            out["summary"].append(row)
+    return out

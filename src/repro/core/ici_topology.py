@@ -79,6 +79,84 @@ def topology_for(n_chips: int, kind: Optional[str] = None) -> Topology:
     return Topology("mesh2d", (r, n_chips // r))
 
 
+def n_links(topo: Topology) -> int:
+    """Number of directed ICI links in a topology's fault plane.
+
+    Ring of ``n`` chips: ``n`` wrap-around links (chip ``i`` → ``i+1``),
+    none when ``n == 1``. 2-D mesh ``(r, c)``: a torus ring per column
+    along axis 0 (``r`` links each, ``c`` rings) and per row along
+    axis 1 — degenerate axes (size 1) contribute none. The link index
+    order is the contract ``collective_schedule`` link-event traces are
+    written in: axis-0 rings first (ring-major: ``col*r + pos``), then
+    axis-1 (``row*c + pos``).
+    """
+    if topo.kind == "ring":
+        n = topo.shape[0]
+        return n if n > 1 else 0
+    r, c = topo.shape
+    return (r * c if r > 1 else 0) + (r * c if c > 1 else 0)
+
+
+def _axis_rings(topo: Topology) -> list[list[np.ndarray]]:
+    """Per schedule axis, the list of link-index arrays of its parallel
+    rings (the ``n_links`` layout). Degenerate axes get no rings."""
+    if topo.kind == "ring":
+        n = topo.shape[0]
+        return [[np.arange(n)] if n > 1 else []]
+    r, c = topo.shape
+    base = r * c if r > 1 else 0
+    ax0 = [j * r + np.arange(r) for j in range(c)] if r > 1 else []
+    ax1 = [base + i * c + np.arange(c) for i in range(r)] if c > 1 \
+        else []
+    return [ax0, ax1]
+
+
+def _ring_pacing(rates: np.ndarray) -> float:
+    """Wire-time stretch of one ring step under per-link rates.
+
+    Every chip forwards its chunk one hop per step, so the step is
+    paced by the slowest transfer. A healthy link at ``rate`` takes
+    ``1/rate`` of nominal; a down link (rate 0) forces its chunk the
+    long way around — store-and-forward over every surviving link of
+    the ring (the ring-detour reroute), which is only possible while
+    the ring has a single cut. Two simultaneous down links partition
+    the ring; no schedule exists, so that raises.
+    """
+    down = rates <= 0.0
+    nd = int(down.sum())
+    if nd == 0:
+        return float(1.0 / rates.min())
+    if nd >= 2:
+        raise ValueError(
+            f"ring partitioned: {nd} links down simultaneously (a ring "
+            f"detour survives one cut; resolve the trace with "
+            f"resolve_link_rates first)")
+    return float((1.0 / rates[~down]).sum())
+
+
+def resolve_link_rates(link_rates: np.ndarray, topo: Topology, *,
+                       floor: float = 0.05) -> np.ndarray:
+    """Make a link-event trace schedulable: within each ring, keep only
+    the first (lowest-index) down link down and lift any further down
+    links to ``floor`` — LinkGuardian-style, the retransmission/FEC
+    path catches the later faults at a crawl before they hard-down, so
+    the ring keeps a single cut and the detour reroute stays valid.
+    Accepts ``(L,)`` or ``(S, L)`` traces; returns a float64 copy.
+    """
+    if not (0.0 < floor <= 1.0):
+        raise ValueError(f"floor must be in (0, 1], got {floor}")
+    r = np.array(link_rates, np.float64, copy=True)
+    flat = r.reshape(1, -1) if r.ndim == 1 else r
+    for rings in _axis_rings(topo):
+        for ring in rings:
+            sub = flat[:, ring]
+            down = sub <= 0.0
+            extra = down & (np.cumsum(down, axis=1) > 1)
+            sub[extra] = floor
+            flat[:, ring] = sub
+    return r
+
+
 def schedule_kind(op_name: str) -> str:
     """Collective algorithm implied by an op's name (the workload
     generators' naming convention: ``ar_*``/``*_allreduce`` ring
@@ -101,7 +179,9 @@ def _phase_steps(kind: str, n: int) -> int:
     return n - 1                    # all-gather / all-to-all
 
 
-def collective_schedule(kind: str, topo: Topology) -> np.ndarray:
+def collective_schedule(kind: str, topo: Topology,
+                        link_rates: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
     """Per-step fractions of a collective op's total per-chip wire bytes.
 
     Ring: equal steps (``2(N-1)`` for all-reduce, ``N-1`` otherwise).
@@ -110,22 +190,58 @@ def collective_schedule(kind: str, topo: Topology) -> np.ndarray:
     ``steps/n`` and the fractions are normalized to sum to exactly 1.
     Degenerate axes (size 1) contribute no steps; a 1-chip topology has
     no schedule (empty array).
+
+    ``link_rates`` injects a measured link-event trace (LinkGuardian
+    style): shape ``(n_links(topo),)`` — or ``(S, n_links)`` for a
+    per-step trace — with rate 1 for a healthy link, a value in (0, 1)
+    for a degraded one, and 0 for a down link. Each step's weight is
+    stretched by the worst ``_ring_pacing`` over that axis's parallel
+    rings (slowest transfer paces the step; down links detour the long
+    way around the ring), and the result is normalized by the *clean*
+    weight sum — an all-ones trace reproduces the clean fractions
+    exactly, and fractions under faults sum to >1, the wire-time
+    inflation the timeline inherits. Two down links in one ring
+    partition it: ``ValueError`` (pre-clean the trace with
+    ``resolve_link_rates`` when that must not happen).
     """
     if kind not in ("all_reduce", "all_gather", "all_to_all"):
         raise ValueError(f"unknown collective kind {kind!r}")
     axes = topo.shape if topo.kind == "mesh2d" else (topo.n_chips,)
     weights: list[float] = []
-    for n in axes:
+    step_axis: list[int] = []
+    for ai, n in enumerate(axes):
         k = _phase_steps(kind, n)
         weights.extend([1.0 / n] * k)
+        step_axis.extend([ai] * k)
     w = np.asarray(weights, np.float64)
-    if w.size == 0:
-        return w
-    return w / w.sum()
+    if w.size == 0 or link_rates is None:
+        return w / w.sum() if w.size else w
+    rates = np.asarray(link_rates, np.float64)
+    nl = n_links(topo)
+    if rates.ndim == 1:
+        rates = np.broadcast_to(rates, (w.size, rates.shape[0]))
+    if rates.ndim != 2 or rates.shape != (w.size, nl):
+        raise ValueError(
+            f"link_rates must have shape ({nl},) or ({w.size}, {nl}) "
+            f"for {topo.kind}{topo.shape} {kind}, got "
+            f"{np.asarray(link_rates).shape}")
+    if not np.isfinite(rates).all() or (rates < 0).any() \
+            or (rates > 1).any():
+        raise ValueError("link_rates must be finite and in [0, 1]")
+    rings = _axis_rings(topo)
+    clean_sum = w.sum()
+    out = w.copy()
+    for s in range(w.size):
+        pace = max(_ring_pacing(rates[s][ring])
+                   for ring in rings[step_axis[s]])
+        out[s] *= pace
+    return out / clean_sum
 
 
 def lower_collectives(wl: Workload, topo: Optional[Topology] = None, *,
-                      staging: bool = True) -> Workload:
+                      staging: bool = True,
+                      link_rates: Optional[np.ndarray] = None
+                      ) -> Workload:
     """Expand each collective op into its topology step schedule.
 
     Pure trace -> trace: returns a NEW ``Workload`` (name suffixed
@@ -139,13 +255,18 @@ def lower_collectives(wl: Workload, topo: Optional[Topology] = None, *,
     timeline-equivalent to the fused op). Workloads on one chip (or a
     degenerate topology) are returned re-wrapped but otherwise
     unchanged.
+
+    ``link_rates`` (a ``collective_schedule`` link-event trace) makes
+    the step split non-uniform and inflates total wire time by the
+    fault pacing; the lowered name gains a ``!`` so faulted variants
+    never alias clean ones in identity caches or reports.
     """
     if topo is None:
         topo = topology_for(max(1, wl.n_chips))
     out: list[Op] = []
     for op in wl.ops:
         kind = schedule_kind(op.name)
-        frac = (collective_schedule(kind, topo)
+        frac = (collective_schedule(kind, topo, link_rates)
                 if op.collective and op.bytes_ici > 0 else np.zeros(0))
         if frac.size <= 1:
             out.append(op)
@@ -160,7 +281,8 @@ def lower_collectives(wl: Workload, topo: Optional[Topology] = None, *,
                     collective=False, bytes_hbm=2.0 * step,
                     flops_vu=(0.5 * step
                               if kind == "all_reduce" else 0.0)))
-    return Workload(f"{wl.name}+topo", wl.kind, tuple(out),
+    suffix = "+topo" if link_rates is None else "+topo!"
+    return Workload(f"{wl.name}{suffix}", wl.kind, tuple(out),
                     n_chips=wl.n_chips,
                     note=f"{wl.note} [{topo.kind}{topo.shape}]".strip())
 

@@ -272,6 +272,40 @@ def severity_plan(severity: float) -> tuple[Perturbation, ...]:
     )
 
 
+def fault_severity(chip_down_frac: float,
+                   link_rates=None,
+                   pg_fault: bool = False) -> float:
+    """Map an epoch's fault state onto the ``severity_plan`` axis.
+
+    The chaos plane (``core.faults``) keys its perturbation severity off
+    the injected fault state rather than an exogenous knob: a drained or
+    failing fleet runs the survivors hotter and burstier, and degraded
+    or down links inject exactly the retransmission/pacing jitter
+    ``LinkDegradation``/``Straggler`` model. Monotone in both inputs,
+    0 for a clean epoch (so the clean path stays the exact identity),
+    and continuous so the severity hint interpolates a scenario's
+    ``severity_levels`` ladder sensibly.
+    """
+    f = float(chip_down_frac)
+    if not (math.isfinite(f) and 0.0 <= f <= 1.0):
+        raise ValueError(
+            f"chip_down_frac must be in [0, 1], got {chip_down_frac}")
+    s = 1.5 * f
+    if link_rates is not None:
+        lr = np.asarray(link_rates, np.float64)
+        if lr.size:
+            if not np.isfinite(lr).all() or (lr < 0).any() \
+                    or (lr > 1).any():
+                raise ValueError(
+                    "link_rates must be finite and in [0, 1]")
+            s += 2.0 * float((1.0 - lr).mean())
+            if (lr <= 0.0).any():
+                s += 0.5
+    if pg_fault:
+        s += 0.25
+    return min(s, 3.0)
+
+
 def perturb_workload(wl: Workload,
                      perturbations: Sequence[Perturbation],
                      rng: np.random.Generator, *,

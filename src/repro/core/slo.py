@@ -115,8 +115,74 @@ def runtime_violation_rate(runtimes, baselines,
     return float(np.mean(r > slo_relax * b))
 
 
-def retune_knobs(energy, runtime, slo_runtime,
-                 deployed=None) -> np.ndarray:
+@dataclass(frozen=True)
+class Hysteresis:
+    """Anti-thrash parameters for the stateful ``retune_knobs`` governor.
+
+    ``cooldown_epochs``: minimum epochs between retunes of one row.
+    ``min_improvement``: an opportunistic (deployed-still-feasible)
+    retune needs the cheapest feasible knob to save at least this
+    fraction of the deployed knob's energy. ``backoff_base`` /
+    ``backoff_cap``: after each *forced* retune in an unbroken run of
+    SLO violations the row's cooldown multiplies by ``backoff_base``
+    (capped at ``backoff_cap`` epochs) — repeated violations mean the
+    environment is flapping faster than retuning can help, so the
+    governor backs off exponentially instead of chasing it.
+    """
+
+    cooldown_epochs: int = 2
+    min_improvement: float = 0.02
+    backoff_base: float = 2.0
+    backoff_cap: int = 16
+
+    def __post_init__(self):
+        if not (isinstance(self.cooldown_epochs, (int, np.integer))
+                and self.cooldown_epochs >= 0):
+            raise ValueError(f"cooldown_epochs must be >= 0, "
+                             f"got {self.cooldown_epochs!r}")
+        if not (isinstance(self.min_improvement, (int, float))
+                and np.isfinite(self.min_improvement)
+                and 0.0 <= self.min_improvement < 1.0):
+            raise ValueError(f"min_improvement must be in [0, 1), "
+                             f"got {self.min_improvement!r}")
+        if not (isinstance(self.backoff_base, (int, float))
+                and np.isfinite(self.backoff_base)
+                and self.backoff_base >= 1.0):
+            raise ValueError(f"backoff_base must be >= 1, "
+                             f"got {self.backoff_base!r}")
+        if not (isinstance(self.backoff_cap, (int, np.integer))
+                and self.backoff_cap >= 1):
+            raise ValueError(f"backoff_cap must be >= 1, "
+                             f"got {self.backoff_cap!r}")
+
+
+@dataclass
+class GovernorState:
+    """Per-row mutable state threaded through epochs of stateful
+    ``retune_knobs`` calls. ``retunes`` accumulates the per-row switch
+    count (the anti-thrash metric)."""
+
+    since_retune: np.ndarray   # epochs since the row last switched
+    cooldown: np.ndarray       # current required gap before switching
+    forced_streak: np.ndarray  # consecutive forced retunes (backoff)
+    retunes: np.ndarray        # cumulative switches
+
+    @classmethod
+    def init(cls, n: int, hysteresis: "Hysteresis") -> "GovernorState":
+        if not (isinstance(n, (int, np.integer)) and n >= 0):
+            raise ValueError(f"n must be >= 0, got {n!r}")
+        big = np.iinfo(np.int64).max // 2
+        return cls(
+            since_retune=np.full(n, big, np.int64),
+            cooldown=np.full(n, int(hysteresis.cooldown_epochs),
+                             np.int64),
+            forced_streak=np.zeros(n, np.int64),
+            retunes=np.zeros(n, np.int64))
+
+
+def retune_knobs(energy, runtime, slo_runtime, deployed=None, *,
+                 hysteresis: Optional[Hysteresis] = None,
+                 state: Optional[GovernorState] = None) -> np.ndarray:
     """The SLO-constrained knob re-tune rule, vectorized over rows.
 
     This is the operator policy shared by the jitter plane
@@ -129,6 +195,19 @@ def retune_knobs(energy, runtime, slo_runtime,
     knob; when no knob is feasible, fall back to the least-violating
     one (smallest runtime/bound ratio). Ties resolve to the lowest knob
     index. Returns the chosen knob index per row, shape (N,).
+
+    With ``hysteresis`` (which then requires ``state`` and an explicit
+    ``deployed``), the rule becomes the stateful anti-thrash governor:
+    a row only switches when its cooldown has elapsed, forced switches
+    (deployed violating) grow the cooldown exponentially while the
+    violation streak lasts, and opportunistic switches additionally
+    need a ``min_improvement`` energy saving. In a piecewise-constant
+    environment the chosen knob is a fixed point of the stateless rule
+    immediately after any switch (cheapest-feasible stays cheapest;
+    least-violating stays least-violating), so the governor retunes at
+    most once per fault transition — the bound ``tests/test_chaos.py``
+    asserts. Stateless calls (``hysteresis=None``) are byte-for-byte
+    the historical behavior.
     """
     e = np.asarray(energy, np.float64)
     r = np.asarray(runtime, np.float64)
@@ -139,6 +218,10 @@ def retune_knobs(energy, runtime, slo_runtime,
     n = e.shape[0]
     rows = np.arange(n)
     if deployed is None:
+        if hysteresis is not None:
+            raise ValueError(
+                "hysteresis requires an explicit deployed vector (the "
+                "governor tracks what is currently running)")
         deployed = np.argmin(e, axis=1)
     deployed = np.asarray(deployed, np.int64)
     feas = r <= b
@@ -149,7 +232,46 @@ def retune_knobs(energy, runtime, slo_runtime,
     need = ~feas[rows, deployed]
     chosen[need & any_feas] = cheapest[need & any_feas]
     chosen[need & ~any_feas] = least_viol[need & ~any_feas]
-    return chosen
+    if hysteresis is None:
+        return chosen
+
+    if state is None:
+        raise ValueError("hysteresis requires a GovernorState "
+                         "(GovernorState.init(n, hysteresis))")
+    if state.since_retune.shape != (n,):
+        raise ValueError(
+            f"GovernorState is for {state.since_retune.shape[0]} rows, "
+            f"got {n}")
+    ready = state.since_retune >= state.cooldown
+    # forced: deployed violates and the stateless target differs
+    forced = need & ready & (chosen != deployed)
+    # opportunistic: deployed feasible, cheapest feasible saves enough
+    cheap_e = np.where(any_feas, e[rows, cheapest], np.inf)
+    oppo = (~need & ready & (cheapest != deployed) & any_feas
+            & (cheap_e <= (1.0 - hysteresis.min_improvement)
+               * e[rows, deployed]))
+    switch = forced | oppo
+    target = np.where(need, chosen, cheapest)
+    out = np.where(switch, target, deployed).astype(np.int64)
+    # state update: streak counts back-to-back forced switches and
+    # resets the moment the deployed knob is feasible again
+    state.forced_streak = np.where(
+        forced, state.forced_streak + 1,
+        np.where(~need, 0, state.forced_streak))
+    base_cd = max(1, int(hysteresis.cooldown_epochs))
+    backoff = np.minimum(
+        float(hysteresis.backoff_cap),
+        base_cd * np.power(hysteresis.backoff_base,
+                           np.minimum(state.forced_streak - 1, 40)))
+    state.cooldown = np.where(
+        forced, np.maximum(1, backoff.astype(np.int64)),
+        np.where(oppo, int(hysteresis.cooldown_epochs),
+                 state.cooldown))
+    state.retunes = state.retunes + switch.astype(np.int64)
+    state.since_retune = np.where(
+        switch, 0, np.minimum(state.since_retune + 1,
+                              np.iinfo(np.int64).max // 2))
+    return out
 
 
 def slo_sweep(model: str, phase: str, *, slo_relax: float = 5.0,

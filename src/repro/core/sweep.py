@@ -379,6 +379,19 @@ def sweep_fleet(scenario, knob_grid=None, **kw):
     return impl(scenario, knob_grid, **kw)
 
 
+def sweep_chaos(scenario, knob_grid=None, **kw):
+    """Chaos plane (ISSUE 8): the fault-injection campaign — seeded
+    chip/link fault timelines (``core.faults``) × fault severities ×
+    policies through the fleet simulator under the anti-thrash
+    hysteresis governor, reporting worst-case SLO-constrained regret,
+    recovery time after repair, and retune counts (vs the stateless
+    thrash baseline). Thin re-export of
+    ``repro.core.fleet.sweep_chaos`` (imported lazily — ``fleet``
+    builds on this module's substrate)."""
+    from repro.core.fleet import sweep_chaos as impl
+    return impl(scenario, knob_grid, **kw)
+
+
 def with_savings(records: list[dict], baseline: str = "NoPG") -> list[dict]:
     """Attach ``savings`` (1 - total_j/baseline_total_j) to each record,
     in one bulk pass over the batched record table.

@@ -1,0 +1,421 @@
+"""Chaos plane (ISSUE 8): fault timelines, faulted collective
+schedules, degraded-mode failover, and the anti-thrash governor.
+
+The acceptance invariants asserted here:
+
+* a uniform (all-ones) link-event trace reproduces the clean
+  ``collective_schedule`` fractions to <=1e-9;
+* the empty fault timeline is an exact no-op for ``sweep_fleet``
+  (bit-identical records/summaries);
+* fault timelines and ``sweep_chaos`` campaigns are seed-deterministic
+  with independent per-(chip, link) streams;
+* under a flapping-link scenario the hysteresis governor's retune
+  count is bounded by the number of distinct fault transitions while
+  the stateless baseline measurably thrashes;
+* energy conservation (epoch total_j = fsum of records + unallocated)
+  holds in every faulted epoch.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.faults import (ChipFaultSpec, FaultSpec, FaultTimeline,
+                               LinkFaultSpec, build_fault_timeline,
+                               fault_plan)
+from repro.core.fleet import (ArrivalSpec, FleetScenario, WorkloadClass,
+                              sweep_chaos, sweep_fleet)
+from repro.core.ici_topology import (Topology, collective_schedule,
+                                     lower_collectives, n_links,
+                                     resolve_link_rates, topology_for)
+from repro.core.opgen import llm_workload
+from repro.core.policies import PolicyKnobs
+from repro.core.slo import Hysteresis
+
+RTOL = 1e-9
+
+DECODE = llm_workload("llama2-13b", "decode", batch=8, n_chips=8, tp=8)
+PREFILL = llm_workload("llama2-13b", "prefill", batch=4, n_chips=8,
+                       tp=8)
+
+TOPOS = (Topology("ring", (8,)), Topology("mesh2d", (4, 8)),
+         Topology("mesh2d", (1, 6)))
+KINDS = ("all_reduce", "all_gather", "all_to_all")
+
+
+def _scenario(**kw):
+    classes = (
+        WorkloadClass("decode", DECODE,
+                      ArrivalSpec("diurnal", rate_rps=40.0,
+                                  period_s=4 * 3600.0),
+                      requests_per_invocation=8),
+        WorkloadClass("prefill", PREFILL,
+                      ArrivalSpec("poisson", rate_rps=6.0),
+                      requests_per_invocation=4),
+    )
+    base = dict(classes=classes, n_chips=64, duration_s=4 * 3600.0,
+                epoch_s=900.0, seed=3,
+                policies=("NoPG", "ReGate-Full"))
+    base.update(kw)
+    return FleetScenario(**base)
+
+
+KNOBS = (PolicyKnobs(), PolicyKnobs(window_scale=2.0),
+         PolicyKnobs(window_scale=0.5))
+
+
+# --------------------------------------------------------------------------
+# faulted collective schedules
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", TOPOS, ids=lambda t: f"{t.kind}{t.shape}")
+@pytest.mark.parametrize("kind", KINDS)
+def test_uniform_trace_reproduces_clean_schedule(topo, kind):
+    clean = collective_schedule(kind, topo)
+    uni = collective_schedule(kind, topo, np.ones(n_links(topo)))
+    assert uni.shape == clean.shape
+    if clean.size:
+        assert float(np.max(np.abs(uni - clean))) <= RTOL
+        assert abs(clean.sum() - 1.0) <= RTOL
+
+
+def test_degraded_link_inflates_schedule():
+    topo = Topology("ring", (8,))
+    rates = np.ones(8)
+    rates[3] = 0.5
+    f = collective_schedule("all_reduce", topo, rates)
+    clean = collective_schedule("all_reduce", topo)
+    # every step crosses the slow link, paced at 1/0.5
+    assert np.all(f > clean)
+    assert abs(f.sum() - 2.0) < 1e-9
+
+
+def test_down_link_detours_the_long_way():
+    topo = Topology("ring", (8,))
+    rates = np.ones(8)
+    rates[2] = 0.0
+    f = collective_schedule("all_gather", topo, rates)
+    # store-and-forward over the 7 surviving links
+    assert abs(f.sum() - 7.0) < 1e-9
+
+
+def test_partitioned_ring_raises_and_resolve_fixes_it():
+    topo = Topology("ring", (8,))
+    rates = np.ones(8)
+    rates[2] = rates[5] = 0.0
+    with pytest.raises(ValueError, match="partition"):
+        collective_schedule("all_reduce", topo, rates)
+    fixed = resolve_link_rates(rates, topo)
+    assert (fixed <= 0).sum() == 1          # one cut survives
+    f = collective_schedule("all_reduce", topo, fixed)
+    assert np.isfinite(f).all() and f.sum() > 1.0
+
+
+def test_mesh_per_step_trace_shape_enforced():
+    topo = Topology("mesh2d", (4, 8))
+    s = collective_schedule("all_reduce", topo).size
+    with pytest.raises(ValueError, match="shape"):
+        collective_schedule("all_reduce", topo, np.ones(3))
+    per_step = np.ones((s, n_links(topo)))
+    f = collective_schedule("all_reduce", topo, per_step)
+    assert abs(f.sum() - 1.0) <= RTOL
+
+
+def test_lowered_faulted_variant_is_distinct_and_inflated():
+    topo = topology_for(8)
+    rates = np.ones(n_links(topo))
+    rates[0] = 0.0
+    clean = lower_collectives(DECODE, topo)
+    faulted = lower_collectives(DECODE, topo, link_rates=rates)
+    assert clean.name.endswith("+topo")
+    assert faulted.name.endswith("+topo!")
+    assert len(clean.ops) == len(faulted.ops)   # stable stack shapes
+    wire = sum(o.bytes_ici * o.count for o in clean.ops)
+    wire_f = sum(o.bytes_ici * o.count for o in faulted.ops)
+    assert wire_f > wire                        # detour pacing
+
+
+# --------------------------------------------------------------------------
+# fault timelines: determinism + stream independence
+# --------------------------------------------------------------------------
+
+def test_timeline_seed_determinism():
+    spec = fault_plan(1.5)
+    a = build_fault_timeline(spec, n_epochs=48, n_chips=32, n_links=8,
+                             seed=7)
+    b = build_fault_timeline(spec, n_epochs=48, n_chips=32, n_links=8,
+                             seed=7)
+    assert (a.chips_down == b.chips_down).all()
+    assert (a.link_rates == b.link_rates).all()
+    assert (a.pg_fault == b.pg_fault).all()
+    c = build_fault_timeline(spec, n_epochs=48, n_chips=32, n_links=8,
+                             seed=8)
+    assert (a.chips_down != c.chips_down).any() \
+        or (a.link_rates != c.link_rates).any()
+
+
+def test_per_link_streams_independent_of_fleet_shape():
+    spec = fault_plan(2.0)
+    small = build_fault_timeline(spec, n_epochs=48, n_chips=16,
+                                 n_links=8, seed=7)
+    wide = build_fault_timeline(spec, n_epochs=48, n_chips=16,
+                                n_links=24, seed=7)
+    # growing the link plane never shifts existing links' draws
+    assert (wide.link_rates[:, :8] == small.link_rates).all()
+    # ...nor the chip plane's
+    assert (wide.chips_down == small.chips_down).all()
+
+
+def test_chip_streams_independent_of_link_spec():
+    base = fault_plan(1.5)
+    harsher = FaultSpec(chip=base.chip,
+                        link=LinkFaultSpec(flap_prob=0.9, down_prob=0.5))
+    a = build_fault_timeline(base, n_epochs=48, n_chips=32, n_links=8,
+                             seed=7)
+    b = build_fault_timeline(harsher, n_epochs=48, n_chips=32,
+                             n_links=8, seed=7)
+    assert (a.chips_down == b.chips_down).all()
+    assert (a.pg_fault == b.pg_fault).all()
+
+
+def test_fault_plan_zero_is_clean():
+    spec = fault_plan(0.0)
+    tl = build_fault_timeline(spec, n_epochs=24, n_chips=16, n_links=8,
+                              seed=0)
+    assert not tl.any_fault().any()
+    assert tl.n_transitions == 0
+    assert tl.repair_epochs() == []
+    empty = FaultTimeline.empty(24, 16, 8)
+    assert (tl.chips_down == empty.chips_down).all()
+    assert (tl.link_rates == empty.link_rates).all()
+
+
+# --------------------------------------------------------------------------
+# fleet integration
+# --------------------------------------------------------------------------
+
+def test_empty_timeline_is_exact_noop():
+    sc = _scenario(severity_levels=(0.0, 0.6))
+    clean = sweep_fleet(sc, KNOBS)
+    empty = sweep_fleet(sc, KNOBS,
+                        faults=FaultTimeline.empty(sc.n_epochs,
+                                                   sc.n_chips, 16))
+    assert clean.records == empty.records
+    assert clean.epoch_summary == empty.epoch_summary
+    assert clean.summary == empty.summary
+
+
+def test_faulted_report_deterministic_and_conserves_energy():
+    sc = _scenario()
+    tl = build_fault_timeline(fault_plan(2.0), n_epochs=sc.n_epochs,
+                              n_chips=sc.n_chips, n_links=16, seed=5)
+    assert tl.any_fault().any()
+    a = sweep_fleet(sc, KNOBS, faults=tl)
+    b = sweep_fleet(sc, KNOBS, faults=tl)
+    assert a.records == b.records and a.summary == b.summary
+    # energy conservation in EVERY epoch, faulted ones included
+    for s in a.epoch_summary:
+        recs = [r["total_j"] for r in a.records
+                if r["policy"] == s["policy"]
+                and r["epoch"] == s["epoch"]]
+        rhs = math.fsum(recs) + s["unallocated_idle_j"]
+        assert abs(s["total_j"] - rhs) <= RTOL * max(1.0, abs(rhs))
+    for pol in sc.policies:
+        tot = a.policy_summary(pol)["total_j"]
+        rhs = math.fsum(r["total_j"] for r in a.records
+                        if r["policy"] == pol) \
+            + math.fsum(s["unallocated_idle_j"]
+                        for s in a.epoch_summary
+                        if s["policy"] == pol)
+        assert abs(tot - rhs) <= RTOL * max(1.0, abs(rhs))
+    assert a.fault_summary is not None
+    assert a.fault_summary["faulted_epochs"] == int(tl.any_fault().sum())
+
+
+def test_failover_reallocation_over_survivors():
+    sc = _scenario()
+    n_e = sc.n_epochs
+    tl = FaultTimeline(
+        n_e, sc.n_chips, 0,
+        chips_down=np.where(np.arange(n_e) % 2 == 1, 24, 0
+                            ).astype(np.int64),
+        link_rates=np.ones((n_e, 0)),
+        pg_fault=np.zeros(n_e, np.bool_),
+        severity_hint=np.zeros(n_e))
+    rep = sweep_fleet(sc, KNOBS, faults=tl)
+    for s in rep.epoch_summary:
+        avail = sc.n_chips - s["chips_down"]
+        assert s["chips_active"] + s["chips_unallocated"] == avail
+    # no-starvation floor survives the dip: on faulted epochs every
+    # positive-demand class still holds at least one chip
+    for s in [s for s in rep.epoch_summary if s["chips_down"] > 0]:
+        recs = [r for r in rep.records
+                if r["epoch"] == s["epoch"]
+                and r["policy"] == s["policy"]]
+        for r in recs:
+            if r["demand_inv"] > 0:
+                assert r["chips"] >= 1
+
+
+def test_pg_fault_falls_back_to_nopg_point():
+    sc = _scenario()
+    n_e = sc.n_epochs
+    pg = np.zeros(n_e, np.bool_)
+    pg[4:8] = True
+    tl = FaultTimeline(n_e, sc.n_chips, 0,
+                       chips_down=np.zeros(n_e, np.int64),
+                       link_rates=np.ones((n_e, 0)),
+                       pg_fault=pg,
+                       severity_hint=np.zeros(n_e))
+    rep = sweep_fleet(sc, KNOBS, faults=tl)
+    by = {(r["epoch"], r["class"], r["policy"]): r for r in rep.records}
+    for e in range(n_e):
+        for cls in rep.class_names:
+            rf, np_ = by[(e, cls, "ReGate-Full")], by[(e, cls, "NoPG")]
+            if pg[e]:
+                # the ladder's last rung: gated policy runs (and
+                # idles) at the ungated NoPG operating point
+                assert rf["pg_fallback"]
+                assert rf["runtime_s"] == np_["runtime_s"]
+                assert rf["inv_total_j"] == np_["inv_total_j"]
+                assert rf["total_j"] == np_["total_j"]
+            else:
+                assert not rf["pg_fallback"]
+                assert rf["inv_total_j"] < np_["inv_total_j"]
+    assert rep.policy_summary("ReGate-Full")["pg_fallback_epochs"] == 4
+    assert rep.policy_summary("NoPG")["pg_fallback_epochs"] == 0
+
+
+def test_shed_ladder_bounds_backlog():
+    # swamp a tiny fleet: demand far beyond capacity, shedding caps
+    # the backlog at shed_backlog_x x per-epoch capacity
+    classes = (WorkloadClass(
+        "decode", DECODE, ArrivalSpec("poisson", rate_rps=500.0),
+        requests_per_invocation=1),)
+    kw = dict(classes=classes, n_chips=8, duration_s=4 * 900.0,
+              epoch_s=900.0, seed=0, policies=("ReGate-Full",))
+    queued = sweep_fleet(FleetScenario(**kw), KNOBS)
+    shed = sweep_fleet(FleetScenario(**kw, shed_backlog_x=1.0), KNOBS)
+    assert queued.policy_summary("ReGate-Full")["shed_inv_total"] == 0.0
+    s = shed.policy_summary("ReGate-Full")
+    assert s["shed_inv_total"] > 0.0
+    final_q = queued.policy_summary("ReGate-Full")["backlog_inv_final"]
+    assert s["backlog_inv_final"] < final_q
+    for r in shed.records:
+        cap = r["chips"] * 900.0 / (r["runtime_s"] * 8.0)
+        assert r["backlog_inv"] <= 1.0 * cap + 1e-6
+
+
+def test_severity_hint_escalates_ladder():
+    sc = _scenario(severity_levels=(0.0, 0.8))
+    n_e = sc.n_epochs
+    hint = np.zeros(n_e)
+    hint[::2] = 2.0
+    tl = FaultTimeline(n_e, sc.n_chips, 0,
+                       chips_down=np.zeros(n_e, np.int64),
+                       link_rates=np.ones((n_e, 0)),
+                       pg_fault=np.zeros(n_e, np.bool_),
+                       severity_hint=hint)
+    rep = sweep_fleet(sc, KNOBS, faults=tl)
+    for e in range(0, n_e, 2):
+        assert rep.severity_by_epoch[e] == 0.8
+
+
+# --------------------------------------------------------------------------
+# anti-thrash: the flapping-link scenario
+# --------------------------------------------------------------------------
+
+def _flapping_setup():
+    """Single decode class on an 8-ring; link 0 flaps down in blocks of
+    3 epochs (epochs 3-5, 9-11, 15-17, 21-23). slo_relax=1.03 sits
+    between the clean knob spread (~1%) and the detour inflation
+    (~5.5%), so during a flap NO knob is feasible and the stateless
+    rule switches from the energy argmin to the least-violating knob
+    every faulted epoch."""
+    classes = (WorkloadClass(
+        "decode", DECODE,
+        ArrivalSpec("replay", times_s=tuple(
+            float(e) * 60.0 for e in range(24) for _ in range(8))),
+        requests_per_invocation=8),)
+    sc = FleetScenario(classes, n_chips=8, duration_s=24 * 60.0,
+                       epoch_s=60.0, seed=0, slo_relax=1.03,
+                       policies=("NoPG", "ReGate-Full"))
+    n_e = sc.n_epochs
+    topo = topology_for(8)
+    rates = np.ones((n_e, n_links(topo)))
+    flap = np.zeros(n_e, bool)
+    for e in range(n_e):
+        if (e // 3) % 2 == 1:
+            rates[e, 0] = 0.0
+            flap[e] = True
+    tl = FaultTimeline(n_e, sc.n_chips, n_links(topo),
+                       chips_down=np.zeros(n_e, np.int64),
+                       link_rates=rates,
+                       pg_fault=np.zeros(n_e, np.bool_),
+                       severity_hint=np.zeros(n_e))
+    return sc, tl, int(flap.sum())
+
+
+def test_antithrash_bound_vs_thrashing_baseline():
+    sc, tl, n_flap_epochs = _flapping_setup()
+    trans = tl.n_transitions
+    assert n_flap_epochs > trans  # blocks longer than 1 epoch
+    knobs = (PolicyKnobs(window_scale=0.25),
+             PolicyKnobs(window_scale=2.0),
+             PolicyKnobs(delay_scale=8.0), PolicyKnobs())
+    gov = sweep_fleet(sc, knobs, faults=tl, hysteresis=Hysteresis())
+    base = sweep_fleet(sc, knobs, faults=tl, hysteresis=None)
+    g = gov.policy_summary("ReGate-Full")["retunes"]
+    b = base.policy_summary("ReGate-Full")["retunes"]
+    # the invariant: hysteresis retunes at most once per distinct
+    # fault transition; the stateless baseline flips knobs every
+    # faulted epoch — measurable thrash
+    assert g <= trans, (g, trans)
+    assert b >= n_flap_epochs, (b, n_flap_epochs)
+    assert b > g
+    # during flap epochs nothing is feasible (that is the scenario)
+    flap_recs = [r for r in gov.records
+                 if r["policy"] == "ReGate-Full"
+                 and tl.link_faulty(r["epoch"])]
+    assert flap_recs and all(not r["feasible_exists"]
+                             for r in flap_recs)
+
+
+def test_chaos_campaign_deterministic():
+    sc = _scenario(n_chips=32, duration_s=8 * 900.0)
+    a = sweep_chaos(sc, KNOBS, fault_severities=(0.0, 2.0))
+    b = sweep_chaos(sc, KNOBS, fault_severities=(0.0, 2.0))
+    assert a["summary"] == b["summary"]
+    # severity 0 realizes the clean timeline: no transitions, no
+    # faulted epochs, zero recovery backlog
+    for row in a["summary"]:
+        if row["fault_severity"] == 0.0:
+            assert row["n_transitions"] == 0
+            assert row["faulted_epochs"] == 0
+            assert row["recovery_epochs"] == []
+        assert row["retunes"] >= 0
+        assert "baseline_retunes" in row
+    # independent scenario streams: dropping one severity leaves the
+    # other's fault draws (and hence its whole report) unchanged
+    solo = sweep_chaos(sc, KNOBS, fault_severities=(2.0,),
+                       thrash_baseline=False)
+    paired = [r for r in a["summary"] if r["fault_severity"] == 2.0]
+    solo_rows = solo["summary"]
+    for pr, sr in zip(paired, solo_rows):
+        for k in ("retunes", "n_transitions", "worst_regret_frac",
+                  "total_j"):
+            assert pr[k] == sr[k], (k, pr[k], sr[k])
+
+
+def test_clamped_replay_surfaced_in_report():
+    times = (0.0, 100.0, 1000.0, 1750.0, 1800.0)   # last three clamp
+    classes = (WorkloadClass(
+        "replayed", DECODE, ArrivalSpec("replay", times_s=times),
+        requests_per_invocation=8),)
+    sc = FleetScenario(classes, n_chips=8, duration_s=1800.0,
+                       epoch_s=900.0, seed=0,
+                       policies=("ReGate-Full",))
+    rep = sweep_fleet(sc)
+    assert rep.clamped_requests == 3
+    assert rep.clamped_by_class == {"replayed": 3}
+    assert rep.requests_total == 5

@@ -121,6 +121,24 @@ def test_replay_binning_rule():
         bin_requests(np.array([41.0]), 4, 10.0)
 
 
+def test_replay_binning_surfaces_clamped():
+    """The final-epoch clamp used to be silent; with_clamped=True
+    counts exactly the arrivals whose next-boundary rule pointed at or
+    past the horizon (ISSUE 8 satellite — regression pin)."""
+    times = np.array([0.0, 5.0, 10.0, 15.0, 35.0, 40.0])
+    counts, clamped = bin_requests(times, 4, 10.0, with_clamped=True)
+    # ceil(35/10)=4 and ceil(40/10)=4 both fold back into epoch 3
+    assert counts.tolist() == [1, 2, 1, 2]
+    assert clamped == 2
+    # default return shape is unchanged (no tuple) and counts agree
+    assert bin_requests(times, 4, 10.0).tolist() == counts.tolist()
+    # a boundary arrival inside the window defers, not clamps
+    _, c2 = bin_requests(np.array([30.0]), 4, 10.0, with_clamped=True)
+    assert c2 == 0
+    _, c3 = bin_requests(np.array([]), 4, 10.0, with_clamped=True)
+    assert c3 == 0
+
+
 def test_arrival_spec_validation():
     with pytest.raises(ValueError, match="unknown arrival kind"):
         ArrivalSpec("weibull")

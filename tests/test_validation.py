@@ -76,3 +76,179 @@ def test_good_grid_still_passes():
         (PolicyKnobs(window_scale=0.5, delay_scale=2.0, sa_width=64),),
         backend="numpy")
     assert np.isfinite(res.runtime_s).all()
+
+
+# --------------------------------------------------------------------------
+# chaos plane (ISSUE 8): fault specs, timelines, governor, fleet knobs
+# --------------------------------------------------------------------------
+
+from repro.core.faults import (ChipFaultSpec, FaultSpec, FaultTimeline,
+                               LinkFaultSpec, build_fault_timeline,
+                               fault_plan)
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    ({"mtbf_epochs": 0.0}, "mtbf_epochs"),
+    ({"mtbf_epochs": -5.0}, "mtbf_epochs"),
+    ({"mtbf_epochs": float("nan")}, "mtbf_epochs"),
+    ({"repair_epochs": 0}, "repair_epochs"),
+    ({"repair_epochs": 2.5}, "repair_epochs"),
+    ({"drain_every": -1}, "drain_every"),
+    ({"drain_frac": -0.1}, "drain_frac"),
+    ({"drain_frac": 1.5}, "drain_frac"),
+    ({"drain_epochs": 0}, "drain_epochs"),
+    ({"pg_fault_prob": float("inf")}, "pg_fault_prob"),
+    ({"pg_fault_prob": -0.2}, "pg_fault_prob"),
+])
+def test_chip_fault_spec_rejects_bad_params(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        ChipFaultSpec(**kwargs)
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    ({"flap_prob": -0.1}, "flap_prob"),
+    ({"flap_prob": 1.1}, "flap_prob"),
+    ({"flap_epochs": 0}, "flap_epochs"),
+    ({"degrade_prob": float("nan")}, "degrade_prob"),
+    ({"degrade_rate": 0.0}, "degrade_rate"),
+    ({"degrade_rate": 1.0}, "degrade_rate"),
+    ({"degrade_rate": -0.5}, "degrade_rate"),
+    ({"degrade_epochs": -2}, "degrade_epochs"),
+    ({"down_prob": 2.0}, "down_prob"),
+    ({"down_epochs": 0}, "down_epochs"),
+])
+def test_link_fault_spec_rejects_bad_params(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        LinkFaultSpec(**kwargs)
+
+
+def test_fault_spec_rejects_wrong_member_types():
+    with pytest.raises(ValueError, match="ChipFaultSpec"):
+        FaultSpec(chip={"mtbf_epochs": 10})
+    with pytest.raises(ValueError, match="LinkFaultSpec"):
+        FaultSpec(link=0.5)
+
+
+def test_fault_plan_rejects_bad_severity():
+    for bad in (-0.5, float("nan"), float("inf"), "high"):
+        with pytest.raises(ValueError, match="severity"):
+            fault_plan(bad)
+
+
+@pytest.mark.parametrize("seed", [
+    None, 1.5, "zero", (), (1, 2.5), True, np.random.default_rng(0),
+])
+def test_build_timeline_rejects_bad_seed(seed):
+    with pytest.raises(ValueError, match="seed"):
+        build_fault_timeline(FaultSpec(), n_epochs=4, n_chips=2,
+                             seed=seed)
+
+
+def test_build_timeline_rejects_bad_dims():
+    with pytest.raises(ValueError, match="n_epochs"):
+        build_fault_timeline(FaultSpec(), n_epochs=0, n_chips=2)
+    with pytest.raises(ValueError, match="n_chips"):
+        build_fault_timeline(FaultSpec(), n_epochs=4, n_chips=0)
+    with pytest.raises(ValueError, match="n_links"):
+        build_fault_timeline(FaultSpec(), n_epochs=4, n_chips=2,
+                             n_links=-1)
+    with pytest.raises(ValueError, match="FaultSpec"):
+        build_fault_timeline(None, n_epochs=4, n_chips=2)
+
+
+def test_fault_timeline_rejects_inconsistent_arrays():
+    ok = FaultTimeline.empty(4, 8, 2)
+    with pytest.raises(ValueError, match="chips_down"):
+        FaultTimeline(4, 8, 2, chips_down=np.zeros(3, np.int64),
+                      link_rates=ok.link_rates, pg_fault=ok.pg_fault,
+                      severity_hint=ok.severity_hint)
+    with pytest.raises(ValueError, match="chips_down"):
+        FaultTimeline(4, 8, 2,
+                      chips_down=np.full(4, 9, np.int64),  # > n_chips
+                      link_rates=ok.link_rates, pg_fault=ok.pg_fault,
+                      severity_hint=ok.severity_hint)
+    with pytest.raises(ValueError, match="link_rates"):
+        FaultTimeline(4, 8, 2, chips_down=ok.chips_down,
+                      link_rates=np.full((4, 2), 1.5),
+                      pg_fault=ok.pg_fault,
+                      severity_hint=ok.severity_hint)
+    with pytest.raises(ValueError, match="link_rates"):
+        FaultTimeline(4, 8, 2, chips_down=ok.chips_down,
+                      link_rates=np.ones((4, 3)),
+                      pg_fault=ok.pg_fault,
+                      severity_hint=ok.severity_hint)
+    with pytest.raises(ValueError, match="pg_fault"):
+        FaultTimeline(4, 8, 2, chips_down=ok.chips_down,
+                      link_rates=ok.link_rates,
+                      pg_fault=np.zeros(4, np.int64),
+                      severity_hint=ok.severity_hint)
+    with pytest.raises(ValueError, match="severity_hint"):
+        FaultTimeline(4, 8, 2, chips_down=ok.chips_down,
+                      link_rates=ok.link_rates, pg_fault=ok.pg_fault,
+                      severity_hint=np.full(4, -1.0))
+
+
+def test_fault_severity_rejects_bad_inputs():
+    from repro.core.perturb import fault_severity
+    with pytest.raises(ValueError, match="chip_down_frac"):
+        fault_severity(-0.1)
+    with pytest.raises(ValueError, match="chip_down_frac"):
+        fault_severity(float("nan"))
+    with pytest.raises(ValueError, match="link_rates"):
+        fault_severity(0.0, link_rates=[1.0, 2.0])
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    ({"cooldown_epochs": -1}, "cooldown_epochs"),
+    ({"cooldown_epochs": 1.5}, "cooldown_epochs"),
+    ({"min_improvement": -0.1}, "min_improvement"),
+    ({"min_improvement": 1.0}, "min_improvement"),
+    ({"backoff_base": 0.5}, "backoff_base"),
+    ({"backoff_base": float("nan")}, "backoff_base"),
+    ({"backoff_cap": 0}, "backoff_cap"),
+])
+def test_hysteresis_rejects_bad_params(kwargs, field):
+    from repro.core.slo import Hysteresis
+    with pytest.raises(ValueError, match=field):
+        Hysteresis(**kwargs)
+
+
+def _tiny_scenario(**kw):
+    from repro.core.fleet import ArrivalSpec, FleetScenario, WorkloadClass
+    from repro.core.opgen import llm_workload
+    cls = WorkloadClass(
+        "d", llm_workload("llama3-8b", "decode", batch=8),
+        ArrivalSpec("poisson", rate_rps=1.0), requests_per_invocation=8)
+    base = dict(classes=(cls,), n_chips=8, npu="NPU-D",
+                policies=("NoPG",), duration_s=1800.0, epoch_s=900.0,
+                seed=0)
+    base.update(kw)
+    return FleetScenario(**base)
+
+
+def test_fleet_scenario_rejects_bad_shed_backlog():
+    for bad in (0.0, -2.0, float("nan")):
+        with pytest.raises(ValueError, match="shed_backlog_x"):
+            _tiny_scenario(shed_backlog_x=bad)
+
+
+def test_arrival_spec_rejects_negative_rate():
+    from repro.core.fleet import ArrivalSpec
+    with pytest.raises(ValueError, match="rate_rps"):
+        ArrivalSpec("poisson", rate_rps=-1.0)
+    with pytest.raises(ValueError, match="rate_rps"):
+        ArrivalSpec("bursty", rate_rps=float("inf"))
+
+
+def test_sweep_fleet_rejects_mismatched_faults_and_hysteresis():
+    from repro.core.fleet import sweep_fleet
+    sc = _tiny_scenario()
+    with pytest.raises(ValueError, match="FaultTimeline"):
+        sweep_fleet(sc, None, faults="chaos")
+    with pytest.raises(ValueError, match="epochs"):
+        sweep_fleet(sc, None,
+                    faults=FaultTimeline.empty(5, sc.n_chips))
+    with pytest.raises(ValueError, match="chips"):
+        sweep_fleet(sc, None, faults=FaultTimeline.empty(2, 4))
+    with pytest.raises(ValueError, match="Hysteresis"):
+        sweep_fleet(sc, None, hysteresis=0.5)
