@@ -34,6 +34,7 @@ DEFAULT_PAIRS = [
     "BENCH_perturb.json:BENCH_perturb.new.json",
     "BENCH_fleet.json:BENCH_fleet.new.json",
     "BENCH_chaos.json:BENCH_chaos.new.json",
+    "BENCH_guard.json:BENCH_guard.new.json",
 ]
 
 

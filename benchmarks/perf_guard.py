@@ -1,0 +1,89 @@
+"""Guard-plane overhead benchmark (ISSUE 9).
+
+Runs the fleet-day scenario of ``perf_fleet`` (4096 chips, 4 tenant
+classes, 96 epochs, 24-knob grid) twice — plain and under a
+``GuardedRunner`` (deadline watchdog + finite-check/quarantine scan on
+every epoch cube) — and gates the guard's **clean-path overhead at
+<= 5%**: resilience must be effectively free when nothing goes wrong.
+Both sides take the min over ``reps`` repetitions; the guarded run
+must also be record-for-record identical to the plain one (the guard
+never changes *what* is computed).
+
+Writes ``BENCH_guard.json`` (registered in ``check_regression``;
+``speedup`` = plain/guarded wall ratio, so the 30% regression margin
+doubles as a backstop on guard-overhead creep).
+
+  PYTHONPATH=src python -m benchmarks.perf_guard [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.fleet import sweep_fleet
+from repro.core.guard import GuardPolicy
+from benchmarks.perf_fleet import GRID, build_scenario
+
+MAX_OVERHEAD = 0.05
+
+# a deadline far above any epoch's wall time: the watchdog thread is
+# exercised on every call, but never trips
+POLICY = GuardPolicy(timeout_s=600.0)
+
+
+def run(out_path: str = "BENCH_guard.json", reps: int = 5) -> dict:
+    sc = build_scenario()
+
+    plain = sweep_fleet(sc, GRID)   # warm-up: trace/compile caches
+    t_plain = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rep = sweep_fleet(sc, GRID)
+        t_plain = min(t_plain, time.perf_counter() - t0)
+    assert rep.records == plain.records
+
+    t_guard = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        grep = sweep_fleet(sc, GRID, guard=POLICY)
+        t_guard = min(t_guard, time.perf_counter() - t0)
+    assert grep.records == plain.records       # guard is a no-op
+    assert grep.epoch_summary == plain.epoch_summary
+    assert grep.guard is not None and grep.guard["events"] == []
+
+    overhead = t_guard / t_plain - 1.0
+    result = {
+        "n_chips": plain.n_chips,
+        "classes": len(sc.classes),
+        "policies": len(sc.policies),
+        "knob_settings": len(tuple(GRID.product())),
+        "epochs": plain.n_epochs,
+        "plain_wall_s": round(t_plain, 4),
+        "guarded_wall_s": round(t_guard, 4),
+        "epochs_per_sec_plain": round(plain.n_epochs / t_plain, 2),
+        "epochs_per_sec_guarded": round(plain.n_epochs / t_guard, 2),
+        "overhead_frac": round(overhead, 4),
+        "speedup": round(t_plain / t_guard, 3),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_guard.json")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args(argv)
+    r = run(args.out, reps=args.reps)
+    for k, v in r.items():
+        print(f"{k}: {v}")
+    ok = r["overhead_frac"] <= MAX_OVERHEAD
+    print(f"gate(guarded clean-path overhead <= {MAX_OVERHEAD:.0%}): "
+          f"{'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,7 @@ through it all, and every faulted scenario is also run under the
 stateless governor as the thrash control.
 
   PYTHONPATH=src python examples/chaos_day.py [--backend jax]
+  PYTHONPATH=src python examples/chaos_day.py --checkpoint /tmp/ck
 
 The run is deterministic under the fixed seed (per-(chip, link) child
 streams; each severity's timeline is keyed by the severity value's own
@@ -22,9 +23,21 @@ exact no-op versus the clean fleet run, per-epoch energy conserves to
 <= 1e-9 relative, and the hysteresis governor retunes at most once per
 fault transition while the stateless baseline thrashes at least as
 often.
+
+``--checkpoint DIR`` adds the guard plane's (ISSUE 9) kill–resume
+demo: the script relaunches itself as a checkpointed subprocess with
+``REPRO_GUARD_KILL`` armed, SIGKILLs it mid-campaign (epoch 60 of 96,
+mid-epoch — no snapshot of that epoch exists), then resumes from DIR
+in-process and asserts the resumed campaign is **bit-identical** to
+the uninterrupted one — summary rows and per-epoch records.
 """
 import argparse
+import json
 import math
+import os
+import signal
+import subprocess
+import sys
 import time
 
 from repro.core.fleet import FleetReport, sweep_fleet
@@ -39,6 +52,7 @@ REL_TOL = 1e-9
 # chip is essentially always down, so gated policies ride the NoPG
 # fallback rung all day — the bottom of the degradation ladder
 SEVERITIES = (0.0, 0.25, 1.0, 2.0)
+KILL_EPOCH = 60   # mid-epoch SIGKILL target for the --checkpoint demo
 
 
 def check_clean_noop(campaign, scenario, grid) -> None:
@@ -65,19 +79,78 @@ def check_energy_conservation(rep: FleetReport) -> None:
         assert rel <= REL_TOL, (pol, rel)
 
 
+def campaign_payload(campaign) -> str:
+    """The campaign's result payload, canonically serialized for the
+    bit-identity assertion (guard bookkeeping differs between a
+    checkpointed and a plain run and is excluded)."""
+    def recs(reports):
+        return {repr(sev): {"records": rep.records,
+                            "epoch_summary": rep.epoch_summary,
+                            "summary": rep.summary}
+                for sev, rep in reports.items()}
+    return json.dumps({"summary": campaign["summary"],
+                       "reports": recs(campaign["reports"]),
+                       "baseline": recs(campaign["baseline_reports"])},
+                      sort_keys=True)
+
+
+def demo_kill_resume(ckdir: str, reference: str, backend) -> None:
+    """SIGKILL a checkpointed self-subprocess mid-campaign, resume
+    from its checkpoint directory, assert bit-identical results."""
+    cmd = [sys.executable, os.path.abspath(__file__),
+           "--checkpoint", ckdir]
+    if backend:
+        cmd += ["--backend", backend]
+    env = dict(os.environ,
+               REPRO_GUARD_KILL=f"mid:{KILL_EPOCH}",
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..",
+                                 "src"),
+                    os.path.dirname(__file__)]))
+    proc = subprocess.run(cmd, env=env, capture_output=True)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+    snaps = sorted(os.listdir(os.path.join(ckdir, "run0_hyst")))
+    print(f"\nkill–resume demo: subprocess SIGKILLed mid-epoch "
+          f"{KILL_EPOCH}; checkpoint holds {snaps}")
+
+    t0 = time.perf_counter()
+    resumed = sweep_chaos(build_scenario(),
+                          KnobGrid(window_scale=(0.5, 1.0, 2.0),
+                                   delay_scale=(1.0, 2.0)),
+                          fault_severities=SEVERITIES,
+                          checkpoint=ckdir)
+    wall = time.perf_counter() - t0
+    assert campaign_payload(resumed) == reference
+    print(f"kill–resume demo: resumed campaign is bit-identical to "
+          f"the uninterrupted run (summary + per-epoch records), "
+          f"{wall:.2f}s wall")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default=None, choices=("numpy", "jax"),
                     help="array backend for every per-epoch batched "
                          "sweep call")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="run the guard-plane kill–resume demo against "
+                         "this campaign checkpoint directory")
     args = ap.parse_args(argv)
     if args.backend:
         with SweepSession(backend=args.backend):
-            return run()
-    return run()
+            return run(args.checkpoint, args.backend)
+    return run(args.checkpoint, args.backend)
 
 
-def run():
+def run(checkpoint=None, backend=None):
+    # armed child mode: the parent (below) relaunched us with
+    # REPRO_GUARD_KILL set — run the checkpointed campaign directly
+    # and die where the hook says; the parent resumes from our ruins
+    if checkpoint is not None and os.environ.get("REPRO_GUARD_KILL"):
+        sweep_chaos(build_scenario(),
+                    KnobGrid(window_scale=(0.5, 1.0, 2.0),
+                             delay_scale=(1.0, 2.0)),
+                    fault_severities=SEVERITIES, checkpoint=checkpoint)
+        return
     scenario = build_scenario()
     grid = KnobGrid(window_scale=(0.5, 1.0, 2.0),
                     delay_scale=(1.0, 2.0))
@@ -135,6 +208,10 @@ def run():
         assert row["retunes"] <= row["baseline_retunes"], row
     print("anti-thrash: hysteresis retunes <= stateless baseline "
           "retunes on every faulted scenario")
+
+    if checkpoint is not None:
+        demo_kill_resume(checkpoint, campaign_payload(campaign),
+                         backend)
 
 
 if __name__ == "__main__":

@@ -313,6 +313,32 @@ def default_backend() -> str:
     return session.resolve("backend")
 
 
+def failover_rungs(name: Optional[str] = None, jax_mesh=None) \
+        -> tuple[tuple[str, object], ...]:
+    """The guard plane's backend-downgrade ladder for a requested
+    (backend, mesh): each rung is ``(rung_name, mesh)``, ordered from
+    the requested substrate down to the numpy oracle —
+    ``jax-mesh`` → ``jax`` (single device) → ``numpy``. A numpy
+    request has nowhere to fall, so its ladder is just itself.
+    ``None`` resolves through the active session, mirroring
+    ``get_backend``."""
+    if name is None:
+        name = session.resolve("backend")
+    if name not in BACKEND_NAMES:
+        raise KeyError(f"unknown array backend {name!r}; "
+                       f"have {BACKEND_NAMES}")
+    if name == "numpy":
+        return (("numpy", None),)
+    if jax_mesh is None:
+        jax_mesh = session.resolve("jax_mesh")
+    rungs: list[tuple[str, object]] = []
+    if jax_mesh is not None:
+        rungs.append(("jax-mesh", jax_mesh))
+    rungs.append(("jax", None))
+    rungs.append(("numpy", None))
+    return tuple(rungs)
+
+
 SA_OCCUPANCY_IMPLS = ("jnp", "pallas")
 
 

@@ -55,14 +55,19 @@ epoch is one batched sweep call over cached stacks).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+import os
+from dataclasses import dataclass, field, fields as dc_fields
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core import session as _session
 from repro.core.carbon import FleetRollup, fleet_rollup
 from repro.core.faults import (FaultSpec, FaultTimeline,
                                build_fault_timeline, fault_plan)
+from repro.core.guard import (CampaignCheckpoint, GuardPolicy,
+                              GuardedRunner, RunManifest, digest_of,
+                              maybe_kill)
 from repro.core.hw import NPUSpec, get_npu
 from repro.core.ici_topology import (lower_collectives, n_links,
                                      resolve_link_rates, topology_for)
@@ -335,6 +340,9 @@ class FleetReport:
     clamped_by_class: dict = field(default_factory=dict)
     # chaos plane: present only when a fault timeline was injected
     fault_summary: Optional[dict] = None
+    # guard plane: GuardReport.to_dict() when the run was guarded —
+    # every retry / failover / quarantine escalation, with reasons
+    guard: Optional[dict] = None
     # (workload variants, severity level) per epoch — populated only
     # with keep_epoch_inputs=True so tests can replay one epoch as a
     # hand-built sweep_grid/evaluate_batch call
@@ -348,6 +356,28 @@ class FleetReport:
 
     def rollup(self, policy: str) -> FleetRollup:
         return fleet_rollup(self.policy_summary(policy)["total_j"])
+
+    # JSON round-trip for the guard plane's final checkpoint: every
+    # field is plain python (floats survive bit-exactly via shortest
+    # repr), EXCEPT epoch_inputs, which holds live Workload objects
+    def to_dict(self) -> dict:
+        if self.epoch_inputs is not None:
+            raise ValueError(
+                "FleetReport with epoch_inputs (live Workload objects) "
+                "cannot be serialized to a checkpoint")
+        d = {f.name: getattr(self, f.name) for f in dc_fields(self)}
+        for name in ("policies", "class_names", "severity_levels"):
+            d[name] = list(d[name])
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetReport":
+        kw = {f.name: d.get(f.name) for f in dc_fields(cls)}
+        kw["policies"] = tuple(kw["policies"])
+        kw["class_names"] = tuple(kw["class_names"])
+        kw["severity_levels"] = tuple(float(s)
+                                      for s in kw["severity_levels"])
+        return cls(**kw)
 
 
 # --------------------------------------------------------------------------
@@ -422,7 +452,9 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                 backend: Optional[str] = None, jax_mesh=None,
                 keep_epoch_inputs: bool = False,
                 faults: Optional[FaultTimeline] = None,
-                hysteresis: Optional[Hysteresis] = None) -> FleetReport:
+                hysteresis: Optional[Hysteresis] = None,
+                guard: Optional[GuardPolicy] = None,
+                checkpoint=None) -> FleetReport:
     """Run the fleet simulation; see the module docstring for the
     model. ``knob_grid`` accepts a ``KnobGrid``, a flat sequence of
     ``PolicyKnobs``, or ``None`` (the single default point) —
@@ -451,6 +483,19 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     knobs persist across epochs, retunes respect cooldown/backoff, and
     the per-policy retune count is bounded by the number of fault
     transitions in piecewise-constant scenarios.
+
+    ``guard`` (a ``guard.GuardPolicy``; ``None`` resolves through the
+    active ``SweepSession``) runs every batched call through the
+    ``GuardedRunner`` — deadline watchdog, retry/backoff, backend
+    failover, NaN quarantine — and attaches the escalation log as
+    ``report.guard``. ``checkpoint`` (a directory path) enables
+    crash-consistent campaign checkpointing: atomic epoch-granular
+    snapshots under a ``RunManifest``, so a killed run resumes from
+    the last published epoch and yields a **bit-identical** final
+    report (every stochastic input replays from explicit seeded
+    streams; the loop state itself — backlog, governor state, records
+    — round-trips exactly through JSON). A finished run's directory
+    short-circuits to the stored final report.
     """
     knobs = as_knob_tuple(knob_grid)
     n_k = len(knobs)
@@ -480,6 +525,48 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     if hysteresis is not None and not isinstance(hysteresis, Hysteresis):
         raise ValueError(
             f"hysteresis must be a slo.Hysteresis, got {type(hysteresis)}")
+
+    # --- guard plane: guarded runner + campaign checkpoint -----------
+    if guard is None:
+        guard = _session.resolve("guard")
+    if guard is not None and not isinstance(guard, GuardPolicy):
+        raise ValueError(
+            f"guard must be a guard.GuardPolicy, got {type(guard)}")
+    gp = guard
+    ck = None
+    if checkpoint is not None:
+        if not isinstance(checkpoint, (str, os.PathLike)):
+            raise ValueError(
+                f"checkpoint must be a directory path (str or "
+                f"os.PathLike), got {type(checkpoint).__name__}")
+        if keep_epoch_inputs:
+            raise ValueError(
+                "checkpoint cannot be combined with keep_epoch_inputs "
+                "(epoch inputs hold live Workload objects and are not "
+                "serializable)")
+        gp = guard if guard is not None else GuardPolicy()
+        bk_name = backend if backend is not None \
+            else _session.resolve("backend")
+        manifest = RunManifest(
+            kind="fleet", seed=int(scenario.seed), n_epochs=n_e,
+            backend=str(bk_name), knob_digest=digest_of(knobs),
+            scenario_digest=digest_of((scenario, ft, hysteresis)),
+            severity_levels=scenario.severity_levels, policies=pols)
+        ck = CampaignCheckpoint(checkpoint, manifest, keep=2)
+        fin = ck.load_final()
+        if fin is not None:
+            return FleetReport.from_dict(fin)
+    runner = None
+    if gp is not None:
+        runner = GuardedRunner(gp, backend=backend, jax_mesh=jax_mesh,
+                               seed=int(scenario.seed))
+
+    def _eval(wls, eval_pols_, step) -> BatchResult:
+        if runner is None:
+            return evaluate_batch(wls, (npu,), eval_pols_, knobs,
+                                  backend=backend, jax_mesh=jax_mesh)
+        return runner.evaluate_batch(wls, (npu,), eval_pols_, knobs,
+                                     step=step)
 
     # --- arrivals: per-class counts, (W, E) --------------------------
     counts = np.zeros((n_w, n_e), np.int64)
@@ -574,8 +661,7 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     # (one extra batched call outside the epoch loop; the SLO bound per
     # (class, policy) is slo_relax x the fastest clean knob, fixed for
     # the whole window so the governor chases a stable target)
-    cal: BatchResult = evaluate_batch(base, (npu,), pols, knobs,
-                                      backend=backend, jax_mesh=jax_mesh)
+    cal: BatchResult = _eval(base, pols, 0)
     rt_cal = cal.runtime_s[:, 0, :, :]                    # (W, P, K)
     slo_bound = scenario.slo_relax * rt_cal.min(axis=2)   # (W, P)
 
@@ -609,13 +695,50 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
     backlog = np.zeros((n_w, n_p))
     eff_hist = np.zeros((n_e, n_w, n_p))
     shed_on = math.isfinite(scenario.shed_backlog_x)
-    for e in range(n_e):
+
+    # --- resume: restore the loop state from the latest snapshot -----
+    # (everything NOT restored here — arrivals, severity indices, SLO
+    # bounds, trace variants — is a deterministic recomputation from
+    # the scenario seed, so replaying the remaining epochs is
+    # bit-identical to never having been killed)
+    start_e = 0
+    if ck is not None:
+        snap = ck.load_epoch()
+        if snap is not None:
+            e0 = int(snap["epoch"])
+            if not 0 <= e0 < n_e:
+                raise ValueError(
+                    f"checkpoint epoch {e0} out of range for a "
+                    f"{n_e}-epoch scenario")
+            start_e = e0 + 1
+            backlog[:] = np.asarray(snap["backlog"], np.float64)
+            eff_hist[:e0 + 1] = np.asarray(snap["eff_hist"], np.float64)
+            report.records[:] = snap["records"]
+            report.epoch_summary[:] = snap["epoch_summary"]
+            gov = snap.get("governor")
+            if (gov is None) != (gov_states is None):
+                raise ValueError(
+                    "checkpoint governor state does not match the "
+                    "requested hysteresis mode")
+            if gov_states is not None:
+                dep_now[:] = np.asarray(gov["dep_now"], np.int64)
+                for st, d in zip(gov_states, gov["states"]):
+                    st.since_retune[:] = np.asarray(d["since_retune"],
+                                                    np.int64)
+                    st.cooldown[:] = np.asarray(d["cooldown"], np.int64)
+                    st.forced_streak[:] = np.asarray(d["forced_streak"],
+                                                     np.int64)
+                    st.retunes[:] = np.asarray(d["retunes"], np.int64)
+            if runner is not None:
+                runner.report.events[:] = snap.get("guard_events", [])
+
+    for e in range(start_e, n_e):
+        if ck is not None:
+            maybe_kill("mid", e)
         wls = epoch_workloads(e)
         # ONE batched sweep call per epoch: the whole active
         # (workload-mix x npu x policy x knob) grid in one pass
-        res: BatchResult = evaluate_batch(wls, (npu,), eval_pols, knobs,
-                                          backend=backend,
-                                          jax_mesh=jax_mesh)
+        res: BatchResult = _eval(wls, eval_pols, e + 1)
         if keep_epoch_inputs:
             report.epoch_inputs.append((wls, float(levels[sev_ix[e]])))
         rt = res.runtime_s[:, 0, :, :]                    # (W, P', K)
@@ -754,6 +877,31 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
                 "retunes": int((chosen != deployed).sum()),
             })
 
+        # epoch boundary: publish the crash-consistent snapshot (async
+        # write behind an atomic rename; shallow list copies suffice —
+        # the loop only ever appends, never mutates, past records)
+        if ck is not None and ((e + 1) % gp.checkpoint_every == 0
+                               or e == n_e - 1):
+            gov_snap = None
+            if gov_states is not None:
+                gov_snap = {
+                    "dep_now": dep_now.tolist(),
+                    "states": [
+                        {"since_retune": st.since_retune.tolist(),
+                         "cooldown": st.cooldown.tolist(),
+                         "forced_streak": st.forced_streak.tolist(),
+                         "retunes": st.retunes.tolist()}
+                        for st in gov_states]}
+            ck.save_epoch(e, {
+                "epoch": e,
+                "backlog": backlog.tolist(),
+                "eff_hist": eff_hist[:e + 1].tolist(),
+                "records": list(report.records),
+                "epoch_summary": list(report.epoch_summary),
+                "governor": gov_snap,
+                "guard_events": list(runner.report.events),
+            })
+
     # --- per-policy window totals + carbon roll-up -------------------
     for pi, policy in enumerate(pols):
         recs = [r for r in report.records if r["policy"] == policy]
@@ -802,6 +950,11 @@ def sweep_fleet(scenario: FleetScenario, knob_grid=None, *,
             "chips_down_max": int(ft.chips_down.max()),
             "repair_epochs": ft.repair_epochs(),
         }
+    if runner is not None:
+        report.guard = runner.report.to_dict()
+    if ck is not None:
+        ck.save_final(report.to_dict())
+        ck.close()
     return report
 
 
@@ -839,7 +992,9 @@ def sweep_chaos(scenario: FleetScenario, knob_grid=None, *,
                 hysteresis: Optional[Hysteresis] = None,
                 thrash_baseline: bool = True,
                 recovery_regret_tol: float = 0.05,
-                backend: Optional[str] = None, jax_mesh=None) -> dict:
+                backend: Optional[str] = None, jax_mesh=None,
+                guard: Optional[GuardPolicy] = None,
+                checkpoint=None) -> dict:
     """The chaos campaign: seeded fault scenarios × severities ×
     policies through the fleet simulator.
 
@@ -863,6 +1018,16 @@ def sweep_chaos(scenario: FleetScenario, knob_grid=None, *,
     counts vs the fault-transition bound and vs the thrash baseline,
     violation rate, shed volume, and energy/carbon totals.
     Deterministic: same scenario seed → bit-identical campaign.
+
+    ``guard`` / ``checkpoint`` thread the guard plane through every
+    fleet run of the campaign (see ``sweep_fleet``). A chaos
+    checkpoint directory holds a campaign-level ``RunManifest`` plus
+    one sub-run checkpoint per (severity, governor) leg
+    (``run<i>_hyst`` / ``run<i>_base``); a SIGKILLed campaign resumes
+    mid-leg from that leg's last epoch snapshot, finished legs
+    short-circuit to their stored final reports, and the summary rows
+    are rebuilt deterministically — the resumed campaign is
+    bit-identical to an uninterrupted one.
     """
     sevs = tuple(float(s) for s in fault_severities)
     if not sevs:
@@ -877,6 +1042,23 @@ def sweep_chaos(scenario: FleetScenario, knob_grid=None, *,
     if not isinstance(hys, Hysteresis):
         raise ValueError(f"hysteresis must be a slo.Hysteresis, "
                          f"got {type(hys)}")
+    ck = None
+    if checkpoint is not None:
+        if not isinstance(checkpoint, (str, os.PathLike)):
+            raise ValueError(
+                f"checkpoint must be a directory path (str or "
+                f"os.PathLike), got {type(checkpoint).__name__}")
+        bk_name = backend if backend is not None \
+            else _session.resolve("backend")
+        manifest = RunManifest(
+            kind="chaos", seed=int(scenario.seed),
+            n_epochs=scenario.n_epochs, backend=str(bk_name),
+            knob_digest=digest_of(as_knob_tuple(knob_grid)),
+            scenario_digest=digest_of((scenario, hys,
+                                       bool(thrash_baseline))),
+            severity_levels=scenario.severity_levels,
+            fault_severities=sevs, policies=scenario.policies)
+        ck = CampaignCheckpoint(checkpoint, manifest, keep=1)
     # the link plane covers the largest per-class topology; smaller
     # classes read a prefix of each epoch's link-rate row
     lmax = max(n_links(topology_for(max(1, c.workload.n_chips)))
@@ -885,21 +1067,27 @@ def sweep_chaos(scenario: FleetScenario, knob_grid=None, *,
                  "seed": int(scenario.seed), "hysteresis": hys,
                  "summary": [], "reports": {}, "baseline_reports": {},
                  "timelines": {}}
-    for sev in sevs:
+    for si, sev in enumerate(sevs):
         sev_key = int(np.float64(sev + 0.0).view(np.uint64))
         tl = build_fault_timeline(
             fault_plan(sev), n_epochs=scenario.n_epochs,
             n_chips=scenario.n_chips, n_links=lmax,
             seed=(int(scenario.seed), sev_key))
+        sub_h = sub_b = None
+        if ck is not None:
+            sub_h = os.path.join(ck.dir, f"run{si}_hyst")
+            sub_b = os.path.join(ck.dir, f"run{si}_base")
         rep = sweep_fleet(scenario, knob_grid, backend=backend,
-                          jax_mesh=jax_mesh, faults=tl, hysteresis=hys)
+                          jax_mesh=jax_mesh, faults=tl, hysteresis=hys,
+                          guard=guard, checkpoint=sub_h)
         out["reports"][sev] = rep
         out["timelines"][sev] = tl
         base = None
         if thrash_baseline:
             base = sweep_fleet(scenario, knob_grid, backend=backend,
                                jax_mesh=jax_mesh, faults=tl,
-                               hysteresis=None)
+                               hysteresis=None, guard=guard,
+                               checkpoint=sub_b)
             out["baseline_reports"][sev] = base
         for policy in scenario.policies:
             ps = rep.policy_summary(policy)

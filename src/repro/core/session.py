@@ -55,7 +55,7 @@ class _Unset:
 UNSET = _Unset()
 
 _FIELDS = ("backend", "jax_mesh", "sa_occupancy_impl",
-           "gating_cache_size")
+           "gating_cache_size", "guard")
 
 
 class SweepSession:
@@ -65,21 +65,28 @@ class SweepSession:
     one of ``backend.BACKEND_NAMES``; ``sa_occupancy_impl`` one of
     ``backend.SA_OCCUPANCY_IMPLS``; ``gating_cache_size`` a cache size
     accepted by ``sa_gating.set_gating_cache_size`` (``None`` =
-    unbounded). Use as a context manager; re-entering an already-active
+    unbounded); ``guard`` a ``guard.GuardPolicy`` (or ``None``) that
+    campaign entry points (``sweep_fleet`` / ``sweep_chaos``) pick up
+    when their ``guard=`` argument is left unset — scoping the guard
+    plane's watchdog/failover/quarantine machinery exactly like the
+    backend. Use as a context manager; re-entering an already-active
     session raises.
     """
 
     def __init__(self, backend: Any = UNSET, jax_mesh: Any = UNSET,
                  sa_occupancy_impl: Any = UNSET,
-                 gating_cache_size: Any = UNSET):
+                 gating_cache_size: Any = UNSET, guard: Any = UNSET):
         if backend is not UNSET:
             _check_backend(backend)
         if sa_occupancy_impl is not UNSET:
             _check_impl(sa_occupancy_impl)
+        if guard is not UNSET:
+            _check_guard(guard)
         self.backend = backend
         self.jax_mesh = jax_mesh
         self.sa_occupancy_impl = sa_occupancy_impl
         self.gating_cache_size = gating_cache_size
+        self.guard = guard
         self._active = False
         self._prev_cache: Any = UNSET
 
@@ -131,6 +138,14 @@ def _check_impl(name: str) -> str:
     return name
 
 
+def _check_guard(value: Any) -> Any:
+    from repro.core.guard import GuardPolicy
+    if value is not None and not isinstance(value, GuardPolicy):
+        raise ValueError(f"guard must be a guard.GuardPolicy or None, "
+                         f"got {type(value)}")
+    return value
+
+
 # -----------------------------------------------------------------------
 # the session stack: [root, outer, ..., innermost]
 # -----------------------------------------------------------------------
@@ -149,6 +164,7 @@ def _root() -> SweepSession:
     s.jax_mesh = None
     s.sa_occupancy_impl = "jnp"
     s.gating_cache_size = UNSET
+    s.guard = None
     s._active = True  # the root never exits
     s._prev_cache = UNSET
     return s
@@ -200,6 +216,8 @@ def set_root(**fields: Any) -> dict:
             _check_backend(value)
         elif name == "sa_occupancy_impl":
             _check_impl(value)
+        elif name == "guard":
+            _check_guard(value)
         prev[name] = getattr(_ROOT, name)
         setattr(_ROOT, name, value)
     return prev

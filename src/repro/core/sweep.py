@@ -34,6 +34,8 @@ from repro.core.opgen import Workload, compile_trace
 from repro.core.policies import (POLICIES, BatchResult, EnergyReport,
                                  KnobGrid, PolicyKnobs, evaluate,
                                  evaluate_batch, knob_columns)
+from repro.core.guard import (GuardPolicy,  # noqa: F401  (re-export)
+                              GuardReport)
 from repro.core.power import COMPONENTS
 from repro.core.session import SweepSession  # noqa: F401  (re-export)
 
@@ -372,7 +374,11 @@ def sweep_fleet(scenario, knob_grid=None, **kw):
     seeded request-arrival traces, one batched ``evaluate_batch`` call
     per epoch, with the online SLO governor switching ``PolicyKnobs``
     and ``core.carbon`` rolling per-chip joules up to fleet
-    kWh/CO2/cost. Thin re-export of ``repro.core.fleet.sweep_fleet``
+    kWh/CO2/cost. The guard plane (ISSUE 9) rides along via
+    ``guard=GuardPolicy(...)`` (watchdog + backend failover + NaN
+    quarantine) and ``checkpoint=<dir>`` (crash-consistent
+    epoch-granular snapshots with bit-identical resume). Thin
+    re-export of ``repro.core.fleet.sweep_fleet``
     (imported lazily — ``fleet`` builds on this module's substrate);
     see that module for the scenario/report data model."""
     from repro.core.fleet import sweep_fleet as impl
@@ -385,7 +391,9 @@ def sweep_chaos(scenario, knob_grid=None, **kw):
     policies through the fleet simulator under the anti-thrash
     hysteresis governor, reporting worst-case SLO-constrained regret,
     recovery time after repair, and retune counts (vs the stateless
-    thrash baseline). Thin re-export of
+    thrash baseline). Accepts the guard plane's ``guard=`` /
+    ``checkpoint=`` kwargs (ISSUE 9): a SIGKILLed campaign resumes
+    from its checkpoint directory bit-identically. Thin re-export of
     ``repro.core.fleet.sweep_chaos`` (imported lazily — ``fleet``
     builds on this module's substrate)."""
     from repro.core.fleet import sweep_chaos as impl

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import math
+import signal
 import time
 
 import jax
@@ -87,7 +88,8 @@ class Server:
 
 def serve_arrivals(srv: Server, spec, *, duration_s: float,
                    epoch_s: float, prompt_len: int, n_tokens: int,
-                   seed: int = 0) -> list[dict]:
+                   seed: int = 0, checkpoint: str | None = None) \
+        -> list[dict]:
     """Serve a seeded arrival trace with epoch-boundary batching.
 
     ``spec`` is a ``repro.core.fleet.ArrivalSpec``; its per-epoch
@@ -96,27 +98,60 @@ def serve_arrivals(srv: Server, spec, *, duration_s: float,
     drains the queue in full ``srv.batch``-sized waves — the remainder
     carries to the next epoch, exactly how the fleet simulator bins
     requests into epochs. Returns one stats dict per epoch.
+
+    SIGTERM/SIGINT are handled guard-plane style (ISSUE 9): instead of
+    dying mid-epoch, the in-flight wave finishes, the current epoch's
+    stats are recorded (flagged ``"drained": True``), and the final
+    report is emitted to the caller — plus, when ``checkpoint`` names
+    a path, an atomic JSON report (``guard.atomic_write_json``) with
+    the per-epoch stats and the interrupting signal, so an operator
+    preempting the server still gets a crash-consistent record. The
+    previous signal handlers are restored on exit either way.
     """
     from repro.core.fleet import arrival_counts
+    from repro.core.guard import atomic_write_json
     n_epochs = max(1, int(math.ceil(duration_s / epoch_s)))
     rng = np.random.default_rng(seed)
     counts = arrival_counts(spec, n_epochs, epoch_s, rng)
     queue = 0
-    stats = []
-    for e in range(n_epochs):
-        queue += int(counts[e])
-        served = 0
-        t0 = time.time()
-        while queue >= srv.batch:
-            prompts = rng.integers(0, srv.cfg.vocab_size,
-                                   (srv.batch, prompt_len),
-                                   dtype=np.int32)
-            srv.generate(prompts, n_tokens)
-            queue -= srv.batch
-            served += srv.batch
-        stats.append({"epoch": e, "arrived": int(counts[e]),
-                      "served": served, "queued": queue,
-                      "wall_s": time.time() - t0})
+    stats: list[dict] = []
+    stop: dict = {"signum": None}
+
+    def _handler(signum, frame):
+        stop["signum"] = signum
+
+    prev = {s: signal.signal(s, _handler)
+            for s in (signal.SIGTERM, signal.SIGINT)}
+    try:
+        for e in range(n_epochs):
+            queue += int(counts[e])
+            served = 0
+            t0 = time.time()
+            while queue >= srv.batch and stop["signum"] is None:
+                prompts = rng.integers(0, srv.cfg.vocab_size,
+                                       (srv.batch, prompt_len),
+                                       dtype=np.int32)
+                srv.generate(prompts, n_tokens)
+                queue -= srv.batch
+                served += srv.batch
+            rec = {"epoch": e, "arrived": int(counts[e]),
+                   "served": served, "queued": queue,
+                   "wall_s": time.time() - t0}
+            if stop["signum"] is not None:
+                rec["drained"] = True
+                stats.append(rec)
+                break
+            stats.append(rec)
+    finally:
+        for s, h in prev.items():
+            signal.signal(s, h)
+        if checkpoint is not None:
+            sig = stop["signum"]
+            atomic_write_json(checkpoint, {
+                "epochs": stats,
+                "served_total": sum(s["served"] for s in stats),
+                "interrupted": (signal.Signals(sig).name
+                                if sig is not None else None)})
     return stats
 
 
@@ -137,6 +172,10 @@ def main(argv=None):
     ap.add_argument("--epoch", type=float, default=5.0,
                     help="batching epoch length, seconds")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None,
+                    help="write the arrival-mode final report to this "
+                         "path (atomic JSON; also written when a "
+                         "SIGTERM/SIGINT drain ends the run early)")
     args = ap.parse_args(argv)
     with use_rules(BASELINE):
         srv = Server(args.arch, batch=args.batch,
@@ -148,11 +187,13 @@ def main(argv=None):
             stats = serve_arrivals(srv, spec, duration_s=args.duration,
                                    epoch_s=args.epoch,
                                    prompt_len=args.prompt_len,
-                                   n_tokens=args.tokens, seed=args.seed)
+                                   n_tokens=args.tokens, seed=args.seed,
+                                   checkpoint=args.checkpoint)
             for s in stats:
+                drain = " [drained]" if s.get("drained") else ""
                 print(f"[serve] epoch {s['epoch']}: arrived "
                       f"{s['arrived']}, served {s['served']}, queued "
-                      f"{s['queued']} ({s['wall_s']:.2f}s)")
+                      f"{s['queued']} ({s['wall_s']:.2f}s){drain}")
             tot = sum(s["served"] for s in stats)
             print(f"[serve] {tot} requests served over "
                   f"{len(stats)} epochs")

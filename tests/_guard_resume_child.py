@@ -1,0 +1,45 @@
+"""Child process for the kill–resume tests (ISSUE 9).
+
+Runs a small, fully deterministic chaos campaign with a campaign
+checkpoint and writes the final summary JSON to ``argv[2]``. The
+parent arms ``REPRO_GUARD_KILL`` to SIGKILL this process at an epoch
+boundary (right after a snapshot publishes) or mid-epoch, then
+relaunches it with the same checkpoint directory — the resumed output
+must be bit-identical to an uninterrupted run.
+"""
+import json
+import sys
+
+from repro.core.fleet import (ArrivalSpec, FleetScenario, WorkloadClass,
+                              sweep_chaos)
+from repro.core.opgen import llm_workload
+from repro.core.policies import KnobGrid
+from repro.core.slo import Hysteresis
+
+N_EPOCHS = 6
+
+
+def campaign(checkpoint=None) -> dict:
+    wl = llm_workload("llama2-13b", "decode", batch=8, n_chips=8, tp=8)
+    sc = FleetScenario(
+        classes=(WorkloadClass(
+            "decode", wl,
+            ArrivalSpec("diurnal", rate_rps=24.0, period_s=3600.0),
+            requests_per_invocation=8),),
+        n_chips=32, npu="NPU-D", policies=("NoPG", "ReGate-Full"),
+        duration_s=3600.0, epoch_s=600.0, seed=17,
+        severity_levels=(0.0, 1.0))
+    out = sweep_chaos(sc, KnobGrid(window_scale=(0.5, 1.0)),
+                      fault_severities=(0.0, 1.0),
+                      hysteresis=Hysteresis(), thrash_baseline=False,
+                      checkpoint=checkpoint)
+    return {"summary": out["summary"],
+            "reports": {repr(sev): rep.to_dict()
+                        for sev, rep in out["reports"].items()}}
+
+
+if __name__ == "__main__":
+    ckdir, out_path = sys.argv[1], sys.argv[2]
+    res = campaign(ckdir)
+    with open(out_path, "w") as f:
+        json.dump(res, f, sort_keys=True)

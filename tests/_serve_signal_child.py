@@ -1,0 +1,46 @@
+"""Child process for the serve drain tests (ISSUE 9 satellite).
+
+Runs ``launch.serve.serve_arrivals`` over a fake (jax-free at the
+server level; the module import still pulls jax) server whose
+``generate`` sleeps, prints READY, and writes the final report to the
+checkpoint path — the parent delivers SIGTERM/SIGINT mid-run and the
+drain discipline must still produce the report and exit 0.
+"""
+import sys
+import time
+
+import numpy as np
+
+
+class _FakeCfg:
+    vocab_size = 1000
+
+
+class FakeServer:
+    """The slice of ``serve.Server`` that ``serve_arrivals`` touches."""
+
+    batch = 4
+    cfg = _FakeCfg()
+
+    def __init__(self, wave_s: float = 0.05):
+        self.wave_s = wave_s
+        self.calls = 0
+
+    def generate(self, prompts, n_tokens):
+        assert prompts.shape[0] == self.batch
+        self.calls += 1
+        time.sleep(self.wave_s)
+        return np.zeros((self.batch, n_tokens), np.int32)
+
+
+if __name__ == "__main__":
+    from repro.core.fleet import ArrivalSpec
+    from repro.launch.serve import serve_arrivals
+
+    checkpoint = sys.argv[1]
+    spec = ArrivalSpec("poisson", rate_rps=40.0)
+    print("READY", flush=True)
+    stats = serve_arrivals(FakeServer(), spec, duration_s=6.0,
+                           epoch_s=1.0, prompt_len=4, n_tokens=2,
+                           seed=3, checkpoint=checkpoint)
+    print(f"DONE {len(stats)}", flush=True)

@@ -1,0 +1,85 @@
+"""Kill–resume acceptance (ISSUE 9): real SIGKILLs against a
+checkpointed chaos campaign.
+
+A subprocess runs ``_guard_resume_child.campaign`` with a campaign
+checkpoint while ``REPRO_GUARD_KILL`` arms the guard plane's
+self-fault-injection hook (``guard.maybe_kill``): ``boundary:<e>``
+SIGKILLs right after epoch ``e``'s snapshot is durably published,
+``mid:<e>`` SIGKILLs at the top of epoch ``e`` before anything of it
+exists on disk. The parent verifies the child really died to SIGKILL,
+relaunches it on the same checkpoint directory, and requires the
+resumed final report — summary rows and per-epoch records — to be
+**bit-identical** (same JSON text) to an uninterrupted run. Boundary
+epochs are drawn seeded-randomly; mid-epoch gets its own case.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import _guard_resume_child as child
+
+CHILD = os.path.join(os.path.dirname(__file__),
+                     "_guard_resume_child.py")
+
+# >=3 seeded-random epoch boundaries + one mid-epoch kill
+_BOUNDARY_EPOCHS = sorted(np.random.default_rng(2026).choice(
+    child.N_EPOCHS, size=3, replace=False).tolist())
+KILL_SPECS = [f"boundary:{e}" for e in _BOUNDARY_EPOCHS] \
+    + [f"mid:{child.N_EPOCHS // 2}"]
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """Uninterrupted checkpointed run, in-process (same code path the
+    child executes), canonically serialized."""
+    ck = tmp_path_factory.mktemp("ref_ck")
+    return json.dumps(child.campaign(str(ck)), sort_keys=True)
+
+
+def _launch(ckdir, out, *, kill=None):
+    env = dict(os.environ)
+    env.pop("REPRO_GUARD_KILL", None)
+    if kill is not None:
+        env["REPRO_GUARD_KILL"] = kill
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(CHILD), "..", "src"),
+         os.path.dirname(CHILD)])
+    return subprocess.run(
+        [sys.executable, CHILD, str(ckdir), str(out)],
+        env=env, capture_output=True, text=True, timeout=300)
+
+
+@pytest.mark.parametrize("kill", KILL_SPECS)
+def test_sigkill_then_resume_is_bit_identical(kill, tmp_path,
+                                              reference):
+    ckdir = tmp_path / "ck"
+    out = tmp_path / "out.json"
+
+    died = _launch(ckdir, out, kill=kill)
+    assert died.returncode == -signal.SIGKILL, died.stderr
+    assert not out.exists()   # killed before the final report
+    phase, _, e = kill.partition(":")
+    snaps = sorted(p.name for p in (ckdir / "run0_hyst").glob(
+        "epoch_*.json"))
+    if phase == "boundary":
+        # the boundary kill lands strictly after the durable publish
+        assert f"epoch_{e}.json" in snaps, snaps
+    assert not (ckdir / "run0_hyst" / "final.json").exists()
+
+    resumed = _launch(ckdir, out)
+    assert resumed.returncode == 0, resumed.stderr
+    assert out.read_text() == reference
+
+
+def test_uninterrupted_subprocess_matches_reference(tmp_path,
+                                                    reference):
+    """The subprocess environment itself introduces no drift."""
+    out = tmp_path / "out.json"
+    run = _launch(tmp_path / "ck", out)
+    assert run.returncode == 0, run.stderr
+    assert out.read_text() == reference

@@ -1,0 +1,77 @@
+"""Serve drain discipline (ISSUE 9 satellite): SIGTERM/SIGINT land
+mid-epoch and ``serve_arrivals`` must drain the in-flight wave, record
+the partial epoch (``"drained": True``), emit the final report, write
+the checkpoint, restore the previous handlers, and exit 0 — instead
+of dying mid-epoch. Signal delivery is tested against a real child
+process; the clean path and handler restoration in-process.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+CHILD = os.path.join(os.path.dirname(__file__),
+                     "_serve_signal_child.py")
+
+
+def _run_child(checkpoint, sig):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(CHILD), "..", "src"),
+         os.path.dirname(CHILD)])
+    proc = subprocess.Popen(
+        [sys.executable, CHILD, str(checkpoint)], env=env,
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+    try:
+        assert proc.stdout.readline().strip() == "READY"
+        time.sleep(0.6)   # land inside an epoch's wave loop
+        proc.send_signal(sig)
+        out, err = proc.communicate(timeout=120)
+    except BaseException:
+        proc.kill()
+        raise
+    return proc.returncode, "READY\n" + out, err
+
+
+@pytest.mark.parametrize("sig", [signal.SIGTERM, signal.SIGINT],
+                         ids=["SIGTERM", "SIGINT"])
+def test_signal_drains_epoch_and_reports(sig, tmp_path):
+    ck = tmp_path / "serve.json"
+    code, out, err = _run_child(ck, sig)
+    assert code == 0, err                       # drained, not killed
+    assert "DONE" in out, (out, err)            # final report emitted
+
+    rep = json.loads(ck.read_text())
+    assert rep["interrupted"] == signal.Signals(sig).name
+    epochs = rep["epochs"]
+    assert 1 <= len(epochs) < 6                 # ended early...
+    assert epochs[-1]["drained"] is True        # ...but drained
+    assert all(e["served"] % 4 == 0 for e in epochs)  # whole waves
+    assert rep["served_total"] == sum(e["served"] for e in epochs)
+    assert int(out.split("DONE")[1]) == len(epochs)
+
+
+def test_clean_run_in_process(tmp_path):
+    from repro.core.fleet import ArrivalSpec
+    from repro.launch.serve import serve_arrivals
+    from _serve_signal_child import FakeServer
+
+    prev_term = signal.getsignal(signal.SIGTERM)
+    prev_int = signal.getsignal(signal.SIGINT)
+    ck = tmp_path / "serve.json"
+    stats = serve_arrivals(FakeServer(wave_s=0.0),
+                           ArrivalSpec("poisson", rate_rps=40.0),
+                           duration_s=3.0, epoch_s=1.0, prompt_len=4,
+                           n_tokens=2, seed=3, checkpoint=str(ck))
+    # full window served, nothing flagged, handlers restored
+    assert len(stats) == 3
+    assert not any(s.get("drained") for s in stats)
+    rep = json.loads(ck.read_text())
+    assert rep["interrupted"] is None
+    assert rep["epochs"] == stats
+    assert signal.getsignal(signal.SIGTERM) is prev_term
+    assert signal.getsignal(signal.SIGINT) is prev_int

@@ -252,3 +252,94 @@ def test_sweep_fleet_rejects_mismatched_faults_and_hysteresis():
         sweep_fleet(sc, None, faults=FaultTimeline.empty(2, 4))
     with pytest.raises(ValueError, match="Hysteresis"):
         sweep_fleet(sc, None, hysteresis=0.5)
+
+
+# --------------------------------------------------------------------------
+# guard plane (ISSUE 9): policy, manifest, checkpoint + entry-point args
+# --------------------------------------------------------------------------
+
+from repro.core.guard import (CampaignCheckpoint, GuardPolicy,
+                              GuardedRunner, RunManifest)
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    ({"timeout_s": 0.0}, "timeout_s"),
+    ({"timeout_s": -1.0}, "timeout_s"),
+    ({"timeout_s": float("nan")}, "timeout_s"),
+    ({"timeout_s": True}, "timeout_s"),
+    ({"max_retries": -1}, "max_retries"),
+    ({"max_retries": 1.5}, "max_retries"),
+    ({"backoff_base_s": 0.0}, "backoff_base_s"),
+    ({"backoff_base_s": float("inf")}, "backoff_base_s"),
+    ({"backoff_factor": 0.5}, "backoff_factor"),
+    ({"backoff_factor": float("nan")}, "backoff_factor"),
+    ({"backoff_jitter": -0.1}, "backoff_jitter"),
+    ({"backoff_jitter": 1.0}, "backoff_jitter"),
+    ({"oracle_tol": 0.0}, "oracle_tol"),
+    ({"oracle_tol": float("inf")}, "oracle_tol"),
+    ({"checkpoint_every": 0}, "checkpoint_every"),
+    ({"checkpoint_every": 2.5}, "checkpoint_every"),
+])
+def test_guard_policy_rejects_bad_params(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        GuardPolicy(**kwargs)
+
+
+_MANIFEST = dict(kind="fleet", seed=1, n_epochs=4, backend="numpy",
+                 knob_digest="k", scenario_digest="s")
+
+
+@pytest.mark.parametrize("kwargs,field", [
+    ({"kind": ""}, "kind"),
+    ({"kind": 3}, "kind"),
+    ({"seed": 1.5}, "seed"),
+    ({"seed": True}, "seed"),
+    ({"n_epochs": 0}, "n_epochs"),
+    ({"backend": ""}, "backend"),
+    ({"knob_digest": ""}, "knob_digest"),
+    ({"scenario_digest": None}, "scenario_digest"),
+])
+def test_run_manifest_rejects_bad_fields(kwargs, field):
+    with pytest.raises(ValueError, match=field):
+        RunManifest(**{**_MANIFEST, **kwargs})
+
+
+def test_campaign_checkpoint_rejects_bad_args(tmp_path):
+    m = RunManifest(**_MANIFEST)
+    with pytest.raises(ValueError, match="directory path"):
+        CampaignCheckpoint(42, m)
+    with pytest.raises(ValueError, match="RunManifest"):
+        CampaignCheckpoint(str(tmp_path), {"kind": "fleet"})
+    with pytest.raises(ValueError, match="keep"):
+        CampaignCheckpoint(str(tmp_path), m, keep=0)
+
+
+def test_guarded_runner_rejects_bad_policy_and_rungs():
+    with pytest.raises(ValueError, match="GuardPolicy"):
+        GuardedRunner("strict")
+    with pytest.raises(ValueError, match="rungs"):
+        GuardedRunner(GuardPolicy(), rungs=())
+
+
+def test_sweep_fleet_rejects_bad_guard_args(tmp_path):
+    from repro.core.fleet import sweep_fleet
+    sc = _tiny_scenario()
+    with pytest.raises(ValueError, match="GuardPolicy"):
+        sweep_fleet(sc, None, guard="strict")
+    with pytest.raises(ValueError, match="directory path"):
+        sweep_fleet(sc, None, checkpoint=7)
+    with pytest.raises(ValueError, match="keep_epoch_inputs"):
+        sweep_fleet(sc, None, checkpoint=str(tmp_path / "ck"),
+                    keep_epoch_inputs=True)
+
+
+def test_sweep_chaos_rejects_bad_checkpoint():
+    from repro.core.fleet import sweep_chaos
+    with pytest.raises(ValueError, match="directory path"):
+        sweep_chaos(_tiny_scenario(), None, checkpoint=7)
+
+
+def test_session_rejects_bad_guard():
+    from repro.core.session import SweepSession
+    with pytest.raises(ValueError, match="GuardPolicy"):
+        SweepSession(guard="paranoid")
