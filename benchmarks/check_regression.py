@@ -28,6 +28,7 @@ import sys
 DEFAULT_PAIRS = [
     "BENCH_policy_engine.json:BENCH_policy_engine.new.json",
     "BENCH_timeline_executor.json:BENCH_timeline_executor.new.json",
+    "BENCH_program_plane.json:BENCH_program_plane.new.json",
     "BENCH_sweep.json:BENCH_sweep.new.json",
     "BENCH_sweep_jax.json:BENCH_sweep_jax.new.json",
     "BENCH_sweep_multidevice.json:BENCH_sweep_multidevice.new.json",

@@ -19,6 +19,9 @@ The contract each backend provides:
   sorted segment ids (empty segments sum to zero);
 * ``jit(fn, static_argnames)`` / ``vmap_knobs(fn, knobs)`` — compile and
   knob-axis-map hooks (identity / Python loop on numpy);
+* ``scan(f, init, xs, length)`` — carry-only sequential loop over the
+  leading axis of the ``xs`` pytree (``lax.scan`` on jax): the
+  program-plane event kernel's spine (``repro.core.program_plane``);
 * ``asarray`` / ``to_numpy`` / ``compute_scope()`` — transfer in/out and
   the dtype discipline scope (jax: float64 via x64);
 * ``sa_occupancy(...)`` — the in-program SA PE-occupancy pass
@@ -119,6 +122,19 @@ class NumpyBackend:
     def block(tree):
         return tree
 
+    @staticmethod
+    def scan(f, init, xs, length: int):
+        """Sequential carry loop (the numpy stand-in for ``lax.scan``).
+
+        ``f(carry, x) -> carry`` with ``x`` the per-step slice of the
+        ``xs`` pytree along its leading axis; returns the final carry.
+        The program-plane event kernel is a scan over the event axis
+        with the (stream, unit) axes vectorized inside the carry."""
+        carry = init
+        for i in range(length):
+            carry = f(carry, {k: v[i] for k, v in xs.items()})
+        return carry
+
 
 class JaxBackend:
     """``jax.numpy`` instantiation: jit + vmap + x64 compute scope.
@@ -197,6 +213,14 @@ class JaxBackend:
     def block(self, tree):
         """Wait for async dispatch so wall-clock timings are honest."""
         return self._jax.block_until_ready(tree)
+
+    def scan(self, f, init, xs, length: int):
+        """``lax.scan`` with a carry-only body (no stacked outputs): the
+        jit'd form of the numpy backend's sequential loop, used by the
+        program-plane event kernel."""
+        carry, _ = self._jax.lax.scan(
+            lambda c, x: (f(c, x), None), init, xs, length=length)
+        return carry
 
     def sa_occupancy(self, mm_m, mm_k, mm_n, saw, weight_load_cycles=None):
         """Per-op SA PE-occupancy stats, computed *inside* the traced

@@ -32,6 +32,8 @@ import enum
 from dataclasses import dataclass, field, replace
 from typing import Iterable, Optional
 
+import numpy as np
+
 from repro.core.hw import NPUSpec, get_npu
 
 
@@ -104,6 +106,29 @@ class ExecResult:
 DELAY_KEYS = {"sa": "sa_full", "vu": "vu", "hbm": "hbm", "ici": "ici"}
 
 
+def scaled_delay(g, key: str, delay_scale: float = 1.0) -> int:
+    """Integer wake delay under the §6.5 ``delay_scale`` knob.
+
+    The single rounding rule shared by the executors and the batched
+    program-plane kernel (``repro.core.program_plane``): both sides must
+    land on the SAME integer or machine times diverge. ``scale=1.0``
+    reproduces the raw Table 3 value exactly."""
+    return int(round(g.on_off_delay[key] * delay_scale))
+
+
+def scaled_window(g, key: str, delay_scale: float = 1.0,
+                  window_scale: float = 1.0) -> int:
+    """Integer idle-detection window under the delay/window knobs.
+
+    ``delay_scale`` rides through the BET (the closed-form engine's
+    convention: window = BET x detection_window_frac, and the knob
+    scales BETs with the delays); ``window_scale`` scales only the
+    window. The 8-cycle floor and the int truncation reproduce the
+    unscaled executor formula bit-for-bit at scales of 1.0."""
+    return max(8, int(g.bet[key] * delay_scale
+                      * g.detection_window_frac * window_scale))
+
+
 class VLIWTimeline:
     """Cycle-stepper reference executor. Each cycle may issue one bundle
     (a dict unit->Instr, plus at most one misc-slot setpm)."""
@@ -112,13 +137,17 @@ class VLIWTimeline:
                  n_vu: int = 2, hw_auto_gating: bool = True,
                  extra_units: Optional[dict[str, str]] = None,
                  delay_keys: Optional[dict[str, str]] = None,
-                 initial_modes: Optional[dict[str, PMode]] = None):
+                 initial_modes: Optional[dict[str, PMode]] = None,
+                 delay_scale: float = 1.0, window_scale: float = 1.0):
         """``extra_units``: name -> kind for units beyond the SA/VU files
         (e.g. {"dma0": "hbm", "ici0": "ici"}). ``delay_keys`` overrides
         the kind -> gating-table key map (e.g. sa -> "sa_pe" when the
         SA gates at PE granularity). ``initial_modes``: per-unit initial
         power mode — software-managed units start in ON (hardware
-        idle-detection disabled; setpm drives them)."""
+        idle-detection disabled; setpm drives them). ``delay_scale`` /
+        ``window_scale`` apply the §6.5 sensitivity knobs with the
+        integer rounding of ``scaled_delay`` / ``scaled_window`` (the
+        program-plane kernel uses the identical integers)."""
         self.npu = get_npu(npu) if isinstance(npu, str) else npu
         self.fus: dict[str, FUState] = {}
         for i in range(n_sa):
@@ -134,15 +163,18 @@ class VLIWTimeline:
         self.delay_keys = dict(DELAY_KEYS)
         if delay_keys:
             self.delay_keys.update(delay_keys)
+        self.delay_scale = float(delay_scale)
+        self.window_scale = float(window_scale)
         self._stalls = 0
         self._n_setpm = 0
 
     def _delay(self, kind: str) -> int:
-        return self.g.on_off_delay[self.delay_keys[kind]]
+        return scaled_delay(self.g, self.delay_keys[kind],
+                            self.delay_scale)
 
     def _window(self, kind: str) -> int:
-        key = self.delay_keys[kind]
-        return max(8, int(self.g.bet[key] * self.g.detection_window_frac))
+        return scaled_window(self.g, self.delay_keys[kind],
+                             self.delay_scale, self.window_scale)
 
     # ------------------------------------------------------------------
     # one-bundle machine step (shared by both executors)
@@ -309,6 +341,62 @@ def merge_events(events: Iterable[tuple[int, dict[str, Instr]]]) \
     for cycle, bundle in events:
         merged.setdefault(int(cycle), {}).update(bundle)
     return sorted(merged.items())
+
+
+# power-mode codes for the columnar event form (``events_to_arrays``) —
+# the batched program-plane kernel consumes these
+PM_NONE, PM_ON, PM_OFF, PM_AUTO = 0, 1, 2, 3
+_PM_CODE = {PMode.ON: PM_ON, PMode.OFF: PM_OFF, PMode.AUTO: PM_AUTO}
+
+
+def events_to_arrays(events: Iterable[tuple[int, dict[str, Instr]]],
+                     units: tuple[str, ...]) -> dict[str, np.ndarray]:
+    """Columnar form of a sparse event program for the batched kernel.
+
+    ``units`` fixes the unit-axis order. Returns int64/int8 arrays:
+
+    * ``cycle`` (E,)    — event cycle indices, strictly increasing;
+    * ``lat``   (E, U)  — per-unit issue latency, 0 where the bundle
+      does not reference the unit;
+    * ``pm``    (E, U)  — misc-slot setpm effect on each unit
+      (``PM_NONE``/``PM_ON``/``PM_OFF``/``PM_AUTO``), decoded from the
+      fu-type + bitmap addressing exactly like the executors.
+
+    SRAM range setpms have no FU-state footprint in the timeline machine
+    (no unit of kind "sram" exists) and are rejected: the program plane
+    accounts SRAM analytically (``lowering.sram_band_gating``).
+    """
+    events = list(events)
+    uix = {u: i for i, u in enumerate(units)}
+    kind = {u: ("hbm" if u.startswith("dma") else
+                "ici" if u.startswith("ici") else u[:2]) for u in units}
+    cycle = np.empty(len(events), np.int64)
+    lat = np.zeros((len(events), len(units)), np.int64)
+    pm = np.zeros((len(events), len(units)), np.int8)
+    prev = -1
+    for e, (idx, bundle) in enumerate(events):
+        if idx <= prev:
+            raise ValueError(
+                f"events must be strictly increasing (got {idx} "
+                f"after {prev})")
+        prev = idx
+        cycle[e] = idx
+        for slot, ins in bundle.items():
+            if slot == "misc":
+                if ins.opcode != "setpm":
+                    continue
+                if ins.pm_range is not None:
+                    raise ValueError(
+                        "range setpm has no timeline unit; SRAM gating "
+                        "is analytic (sram_band_gating)")
+                code = _PM_CODE[ins.pm_mode]
+                for u, i in uix.items():
+                    if (kind[u] == ins.pm_fu_type
+                            and (ins.pm_bitmap >> unit_index(u)) & 1):
+                        pm[e, i] = code
+            elif slot in uix:
+                lat[e, uix[slot]] = ins.latency
+    return {"cycle": cycle, "lat": lat, "pm": pm}
 
 
 def expand_events(events: Iterable[tuple[int, dict[str, Instr]]],

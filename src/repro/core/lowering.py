@@ -34,12 +34,14 @@ pass are exactly the runs of VU-free ops.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
 
-from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu
+from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu, \
+    with_sa_width
 from repro.core.isa import (EventTimeline, ExecResult, Instr, PMode,
                             expand_events, setpm)
 from repro.core.opgen import TraceArrays, Workload, compile_trace
@@ -48,7 +50,7 @@ from repro.core.passes import (IdleInterval, SetpmPlacement, SlotUse,
                                should_gate)
 from repro.core.policies import (PolicyKnobs, _component_policies,
                                  _fine_grained_vu_vec, evaluate,
-                                 trace_times)
+                                 knob_columns, trace_times)
 
 # component -> (unit name, FU kind) in the lowered program
 UNIT_OF = {"sa": ("sa0", "sa"), "vu": ("vu0", "vu"),
@@ -87,11 +89,28 @@ class LoweredProgram:
         return int(self.inst_op.size)
 
 
+# Identity-keyed lowering cache, the ``compile_trace`` convention:
+# (id(workload), id(npu spec)) -> the lowered program. NPU specs are
+# module-level singletons (or ``with_sa_width`` memoized variants) and
+# the cached value holds a strong ref to the spec, so its id stays
+# valid for the entry's lifetime; the workload side is a weak ref with
+# a finalizer, so ids can never be observed after reuse. This is what
+# lets ``crossval_record`` / the batched program plane sweep the same
+# suite repeatedly without re-lowering every call.
+_LOWER_CACHE: dict[tuple[int, int],
+                   tuple["weakref.ref", "LoweredProgram"]] = {}
+
+
 def lower_workload(wl: Workload, npu: NPUSpec | str = "NPU-D") \
         -> LoweredProgram:
     """Expand the op stream (counts included) onto a back-to-back cycle
-    schedule and emit per-unit SlotUse streams."""
+    schedule and emit per-unit SlotUse streams. Cached by (workload,
+    npu-spec) identity, like ``compile_trace``."""
     npu = get_npu(npu) if isinstance(npu, str) else npu
+    key = (id(wl), id(npu))
+    hit = _LOWER_CACHE.get(key)
+    if hit is not None and hit[0]() is wl and hit[1].npu is npu:
+        return hit[1]
     tr = compile_trace(wl)
     tm = trace_times(tr, npu)
     inst_op = np.repeat(np.arange(tr.n_ops), tr.count.astype(np.int64))
@@ -119,10 +138,13 @@ def lower_workload(wl: Workload, npu: NPUSpec | str = "NPU-D") \
         lens = a_cy[active]
         uses[unit] = [SlotUse(int(s), unit, "op", int(d))
                       for s, d in zip(starts, lens)]
-    return LoweredProgram(
+    prog = LoweredProgram(
         workload=wl.name, npu=npu, horizon=int(edges[-1]), uses=uses,
         op_start=op_start, op_end=op_end, inst_op=inst_op,
         demand=tr.sram_demand[inst_op], tr=tr, tm=tm)
+    _LOWER_CACHE[key] = (weakref.ref(
+        wl, lambda _: _LOWER_CACHE.pop(key, None)), prog)
+    return prog
 
 
 def rescale_program(prog: LoweredProgram, target_horizon: int) \
@@ -162,9 +184,27 @@ def rescale_program(prog: LoweredProgram, target_horizon: int) \
 # §4.3 passes over the full-length program
 # --------------------------------------------------------------------------
 
-def instrument_program(prog: LoweredProgram) -> list[SetpmPlacement]:
+# instrumentation re-placement cache: the placements depend only on the
+# program identity and the delay scale (BETs and wake delays move
+# together under the §6.5 knob), so a (program, delay_scale) pair is
+# computed once per sweep no matter how many window/leak knob points
+# share it. Strong ref to the program keeps its id valid; a small FIFO
+# bound keeps ad-hoc knob grids from growing the cache without limit.
+_INSTR_CACHE: dict[tuple[int, float],
+                   tuple[LoweredProgram, list[SetpmPlacement]]] = {}
+_INSTR_CACHE_MAX = 256
+
+
+def instrument_program(prog: LoweredProgram,
+                       delay_scale: float = 1.0) -> list[SetpmPlacement]:
     """Run the VU idleness analysis + BET-based setpm insertion over the
-    lowered program (the software-managed unit under ReGate-Full)."""
+    lowered program (the software-managed unit under ReGate-Full).
+    ``delay_scale`` applies the §6.5 knob (BETs scale with the wake
+    delays); results are cached per (program, delay_scale)."""
+    key = (id(prog), float(delay_scale))
+    hit = _INSTR_CACHE.get(key)
+    if hit is not None and hit[0] is prog:
+        return hit[1]
     vu_uses = prog.uses[UNIT_OF["vu"][0]]
     if not vu_uses:
         # VU never used: one whole-program gate
@@ -173,7 +213,12 @@ def instrument_program(prog: LoweredProgram) -> list[SetpmPlacement]:
     else:
         idle = analyze_vu_idleness(vu_uses, horizon=prog.horizon,
                                    include_leading=True)
-    return instrument_setpm(idle, prog.npu, "vu")
+    placements = instrument_setpm(idle, prog.npu, "vu",
+                                  delay_scale=delay_scale)
+    if len(_INSTR_CACHE) >= _INSTR_CACHE_MAX:
+        _INSTR_CACHE.pop(next(iter(_INSTR_CACHE)))
+    _INSTR_CACHE[key] = (prog, placements)
+    return placements
 
 
 def build_events(prog: LoweredProgram,
@@ -213,7 +258,8 @@ def build_events(prog: LoweredProgram,
 # SRAM segment-band lifetime analysis
 # --------------------------------------------------------------------------
 
-def sram_band_gating(prog: LoweredProgram) -> dict:
+def sram_band_gating(prog: LoweredProgram,
+                     delay_scale: float = 1.0) -> dict:
     """Exact per-segment dead-interval gating, vectorized over segment
     bands.
 
@@ -229,13 +275,15 @@ def sram_band_gating(prog: LoweredProgram) -> dict:
 
     Returns gated segment-cycles, busy segment-cycles, range-setpm
     count, and the dead-segment count (never-used capacity).
+    ``delay_scale`` scales BET and transition cost together (the
+    closed-form engine's §6.5 convention).
     """
     npu = prog.npu
     n_seg = npu.sram_segments
     seg = SRAM_SEGMENT_BYTES
     horizon = int(prog.horizon)
-    bet = npu.gating.bet["sram_off"]
-    delay = npu.gating.on_off_delay["sram_off"]
+    bet = npu.gating.bet["sram_off"] * delay_scale
+    delay = npu.gating.on_off_delay["sram_off"] * delay_scale
     d = np.minimum(prog.demand, n_seg * seg)
     out = {"gated_segcycles": 0.0, "busy_segcycles": 0.0,
            "setpm": 0.0, "dead_segments": 0, "n_segments": n_seg,
@@ -309,7 +357,9 @@ class ProgramPlaneSummary:
 
 def execute_program(prog: LoweredProgram,
                     placements: Optional[list[SetpmPlacement]] = None,
-                    use_reference: bool = False) -> ProgramPlaneSummary:
+                    use_reference: bool = False,
+                    knobs: Optional[PolicyKnobs] = None) \
+        -> ProgramPlaneSummary:
     """Run the instrumented program (ReGate-Full semantics: SA at PE
     wake granularity + hw idle detection, VU software-managed via the
     inserted setpm pairs, DMA/ICI hw idle detection) and fold in the
@@ -317,18 +367,24 @@ def execute_program(prog: LoweredProgram,
 
     ``use_reference`` executes on the dense cycle-stepper instead of the
     event-driven executor (equality checks; O(cycles), so keep the
-    program small)."""
+    program small). ``knobs`` threads the §6.5 delay/window scales
+    through instrumentation, executor, and the closed-form folds
+    (``knobs.sa_width`` must already be applied to ``prog``'s spec by
+    lowering on the ``with_sa_width`` variant)."""
     npu = prog.npu
+    knobs = knobs if knobs is not None else PolicyKnobs()
     if placements is None:
-        placements = instrument_program(prog)
+        placements = instrument_program(prog,
+                                        delay_scale=knobs.delay_scale)
     events = build_events(prog, placements)
+    tl_kw = dict(npu=npu, delay_scale=knobs.delay_scale,
+                 window_scale=knobs.window_scale, **REGATE_FULL_TIMELINE)
     if use_reference:
         from repro.core.isa import VLIWTimeline
-        res = VLIWTimeline(npu=npu, **REGATE_FULL_TIMELINE).run(
+        res = VLIWTimeline(**tl_kw).run(
             expand_events(events, prog.horizon))
     else:
-        res = EventTimeline(npu=npu, **REGATE_FULL_TIMELINE).run(
-            events, horizon=prog.horizon)
+        res = EventTimeline(**tl_kw).run(events, horizon=prog.horizon)
 
     gated = {c: float(res.fu_gated_cycles[u])
              for c, (u, _) in UNIT_OF.items()}
@@ -339,15 +395,17 @@ def execute_program(prog: LoweredProgram,
             p.instr.pm_fu_type, 0.0) + 1.0
 
     # intra-op VU bursts: closed form shared with the policy engine
+    leak = knobs.leak_off_logic if knobs.leak_off_logic is not None \
+        else npu.gating.leak_off_logic
     fv = _fine_grained_vu_vec(
         prog.tm, prog.tr, npu, _component_policies("ReGate-Full")["vu"],
-        1.0, npu.gating.leak_off_logic, PolicyKnobs())
+        1.0, leak, knobs)
     gated["vu"] += fv["gated_s"] * npu.freq_hz
     setpm_isa["vu"] += fv["setpm"]
     wakes["vu"] += fv["wakes"]
 
     # SRAM segment bands
-    sb = sram_band_gating(prog)
+    sb = sram_band_gating(prog, delay_scale=knobs.delay_scale)
     gated["sram"] = sb["gated_segcycles"] / max(1, sb["n_segments"])
     setpm_isa["sram"] = sb["setpm"]
 
@@ -361,27 +419,63 @@ def execute_program(prog: LoweredProgram,
         exec_result=res)
 
 
-def crossval_record(wl: Workload, npu: NPUSpec | str = "NPU-D") -> dict:
-    """One flat record comparing the program plane against the
-    closed-form ``ReGate-Full`` (sw) policy evaluation."""
-    npu = get_npu(npu) if isinstance(npu, str) else npu
-    rep = evaluate(wl, npu, "ReGate-Full")
-    prog = lower_workload(wl, npu)
-    summ = execute_program(prog)
-    rt_cy = npu.cycles(rep.runtime_s)
+def plane_record(workload: str, npu: NPUSpec, knobs: PolicyKnobs,
+                 knob_idx: int, prog: dict, policy: dict) -> dict:
+    """Assemble one program-plane sweep record from scalar inputs.
+
+    The single schema shared by the per-cell oracle
+    (``crossval_record``) and the batched plane
+    (``repro.core.program_plane``), so record-for-record comparison is
+    a key-by-key equality. ``prog`` carries the executor-side scalars
+    (cycles, stall_cycles, n_events, per-component gated cycles / wake
+    events, setpm counts); ``policy`` the closed-form side (runtime_s,
+    per-component gated_s, setpm counts). Every ``KnobGrid`` column is
+    emitted unconditionally (the PR-7 contract: ``with_savings`` /
+    ``group_by`` consumers key on them)."""
+    rt_cy = npu.cycles(policy["runtime_s"])
+    cycles = max(1, int(prog["cycles"]))
     rec = {
-        "workload": wl.name, "npu": npu.name,
-        "prog_cycles": summ.cycles, "policy_cycles": rt_cy,
-        "runtime_rel_err": abs(summ.cycles - rt_cy) / max(1.0, rt_cy),
-        "n_events": summ.n_events, "stall_cycles": summ.stall_cycles,
+        "workload": workload, "npu": npu.name,
+        "policy": "ReGate-Full",
+        **knob_columns(knobs, knob_idx),
+        "prog_cycles": int(prog["cycles"]), "policy_cycles": rt_cy,
+        "runtime_rel_err": abs(prog["cycles"] - rt_cy) / max(1.0, rt_cy),
+        "n_events": int(prog["n_events"]),
+        "stall_cycles": int(prog["stall_cycles"]),
     }
     for c in ("sa", "vu", "hbm", "ici", "sram"):
-        pol_frac = rep.gated_s[c] / max(1e-30, rep.runtime_s)
+        pol_frac = policy["gated_s"][c] / max(1e-30, policy["runtime_s"])
+        frac = prog["gated_cycles"][c] / cycles
         rec[f"gated_frac_policy_{c}"] = pol_frac
-        rec[f"gated_frac_prog_{c}"] = summ.gated_frac[c]
-        rec[f"gated_frac_absdiff_{c}"] = abs(
-            summ.gated_frac[c] - pol_frac)
+        rec[f"gated_frac_prog_{c}"] = frac
+        rec[f"gated_frac_absdiff_{c}"] = abs(frac - pol_frac)
+        rec[f"gated_s_prog_{c}"] = prog["gated_cycles"][c] / npu.freq_hz
+    for c in ("sa", "vu", "hbm", "ici"):
+        rec[f"wakes_prog_{c}"] = prog["wake_events"][c]
     for c in ("vu", "sram"):  # the sw-managed components emit setpm
-        rec[f"setpm_policy_{c}"] = rep.setpm_by[c]
-        rec[f"setpm_prog_{c}"] = summ.setpm_isa[c]
+        rec[f"setpm_policy_{c}"] = policy["setpm_by"][c]
+        rec[f"setpm_prog_{c}"] = prog["setpm_isa"][c]
     return rec
+
+
+def crossval_record(wl: Workload, npu: NPUSpec | str = "NPU-D",
+                    knobs: Optional[PolicyKnobs] = None,
+                    knob_idx: int = 0) -> dict:
+    """One flat record comparing the program plane against the
+    closed-form ``ReGate-Full`` (sw) policy evaluation, at one knob
+    point (lowering, instrumentation, and trace compilation all ride
+    their identity caches, so repeated sweeps stop re-lowering)."""
+    npu = get_npu(npu) if isinstance(npu, str) else npu
+    knobs = knobs if knobs is not None else PolicyKnobs()
+    rep = evaluate(wl, npu, "ReGate-Full", knobs)
+    prog = lower_workload(wl, with_sa_width(npu, knobs.sa_width))
+    summ = execute_program(prog, knobs=knobs)
+    return plane_record(
+        wl.name, npu, knobs, knob_idx,
+        prog={"cycles": summ.cycles, "n_events": summ.n_events,
+              "stall_cycles": summ.stall_cycles,
+              "gated_cycles": summ.gated_cycles,
+              "wake_events": summ.wake_events,
+              "setpm_isa": summ.setpm_isa},
+        policy={"runtime_s": rep.runtime_s, "gated_s": rep.gated_s,
+                "setpm_by": rep.setpm_by})

@@ -21,7 +21,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.core.hw import NPUSpec, SRAM_SEGMENT_BYTES, get_npu
-from repro.core.isa import Instr, PMode, setpm, unit_index
+from repro.core.isa import Instr, PMode, scaled_delay, setpm, unit_index
 
 INF = float("inf")
 
@@ -137,15 +137,20 @@ def should_gate(interval_len, bet: int, delay: int):
 def instrument_setpm(vu_idle: dict[str, list[IdleInterval]],
                      npu: NPUSpec | str = "NPU-D", fu_type: str = "vu",
                      bet_key: Optional[str] = None,
-                     delay_key: Optional[str] = None) \
-        -> list[SetpmPlacement]:
+                     delay_key: Optional[str] = None,
+                     delay_scale: float = 1.0) -> list[SetpmPlacement]:
     """BET-based setpm insertion for one FU family (default VU). Adjacent
     slots gated by the same interval share one setpm via the fu bitmap
     (paper: one misc slot per cycle, bitmap amortizes). ``bet_key`` /
-    ``delay_key`` override the Table-3 row (default: the fu type)."""
+    ``delay_key`` override the Table-3 row (default: the fu type);
+    ``delay_scale`` applies the §6.5 knob — BETs scale with the delays
+    (the closed-form engine's convention) and the pre-wake placement
+    uses the integer delay the scaled executor wakes with
+    (``isa.scaled_delay``), so the hidden-wake alignment is preserved
+    at every scale."""
     npu = get_npu(npu) if isinstance(npu, str) else npu
-    bet = npu.gating.bet[bet_key or fu_type]
-    delay = npu.gating.on_off_delay[delay_key or fu_type]
+    bet = npu.gating.bet[bet_key or fu_type] * delay_scale
+    delay = scaled_delay(npu.gating, delay_key or fu_type, delay_scale)
     # group intervals by (start, end) so one bitmap covers multiple units
     groups: dict[tuple, int] = {}
     for unit, ivs in vu_idle.items():
@@ -160,7 +165,7 @@ def instrument_setpm(vu_idle: dict[str, list[IdleInterval]],
                 groups[key] = groups.get(key, 0) | (1 << idx)
     out = []
     for (start, end, profitable), bitmap in sorted(groups.items()):
-        reason = (f"idle {end - start:.0f} > bet {bet}" if profitable
+        reason = (f"idle {end - start:.0f} > bet {bet:g}" if profitable
                   else "dma-unbounded idle")
         out.append(SetpmPlacement(
             int(start), setpm(fu_type, bitmap, PMode.OFF), reason))

@@ -1760,6 +1760,26 @@ def _sharded_backend_data(st: StackedTrace, npu: NPUSpec, bk,
     return data, sram_setpm
 
 
+def knob_pairs(knob_grid) -> "tuple[list[tuple], np.ndarray]":
+    """Unique (sa_width, delay_scale, window_scale) triples of a knob
+    grid and the knob -> triple inverse map — the axes the executors
+    actually see (leak knobs are post-hoc linear and never change
+    machine behavior). The host-side twin of ``_knob_arrays``'s
+    unique-pair dedup, shared with the batched program plane
+    (``repro.core.program_plane``): knob points differing only in leak
+    ratios map onto one executor row."""
+    trips: list[tuple] = []
+    index: dict[tuple, int] = {}
+    inv = np.empty(len(knob_grid), np.int64)
+    for i, k in enumerate(knob_grid):
+        key = (k.sa_width, float(k.delay_scale), float(k.window_scale))
+        if key not in index:
+            index[key] = len(trips)
+            trips.append(key)
+        inv[i] = index[key]
+    return trips, inv
+
+
 def _knob_arrays(knob_grid, npu: NPUSpec, bk, pad_to: int = 0) -> dict:
     """Knob-grid arrays for the kernel: the full per-knob columns plus
     the unique (sa_width, delay_scale, window_scale) triples the heavy

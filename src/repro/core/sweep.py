@@ -353,20 +353,52 @@ def sweep_reference(workloads: Sequence[Workload] | Workload,
 
 
 def sweep_program_plane(workloads: Sequence[Workload] | Workload,
-                        npus: Iterable[NPUSpec | str] = ("NPU-D",)) \
-        -> list[dict]:
-    """Cross-validation sweep: lower every (workload, npu) cell onto the
-    program plane (``repro.core.lowering``), execute it on the
-    event-driven ISA executor, and emit one flat record per cell
-    comparing gated-cycle fractions and setpm counts against the
-    closed-form ``ReGate-Full`` evaluation. Record order is
-    workload-major, then NPU (same convention as ``sweep``)."""
+                        npus: Iterable[NPUSpec | str] = ("NPU-D",),
+                        knob_grid=None, *, backend: Optional[str] = None,
+                        jax_mesh=None) -> list[dict]:
+    """Cross-validation sweep over the batched program plane (ISSUE 10):
+    lower every (workload, npu) cell, re-place the §4.3 ``setpm``
+    instrumentation once per unique delay scale, and execute ALL cells
+    through the ``repro.core.program_plane`` array kernel on the
+    selected backend. One flat record per (workload, npu, knob) cell
+    compares gated-cycle fractions and setpm counts against the
+    closed-form ``ReGate-Full`` evaluation (``evaluate_batch`` on the
+    same substrate); every ``KnobGrid`` column is emitted
+    unconditionally. Record order is workload-major, then NPU, then
+    knob index (the ``sweep_grid`` convention).
+
+    ``knob_grid`` accepts a ``KnobGrid`` (crossed), a flat sequence of
+    ``PolicyKnobs``, or ``None`` (the single default point — the
+    original two-axis sweep). ``backend``/``jax_mesh`` resolve through
+    the active ``SweepSession`` exactly like ``sweep_grid``; cell-for-
+    cell the records match the per-cell oracle
+    (``sweep_program_plane_reference``) to <=1e-9 relative, executor
+    integers exactly."""
+    from repro.core.policies import as_knob_tuple
+    from repro.core.program_plane import program_plane_batch
+    return program_plane_batch(
+        workloads, npus, as_knob_tuple(knob_grid),
+        backend=backend, jax_mesh=jax_mesh).records()
+
+
+def sweep_program_plane_reference(workloads: Sequence[Workload] | Workload,
+                                  npus: Iterable[NPUSpec | str]
+                                  = ("NPU-D",),
+                                  knob_grid=None) -> list[dict]:
+    """The per-cell host oracle for ``sweep_program_plane``: one
+    ``lowering.crossval_record`` (event-driven ``EventTimeline`` +
+    closed-form ``evaluate``) per (workload, npu, knob) cell, same
+    record order. This is the pre-ISSUE-10 evaluation path, kept as the
+    equivalence baseline for the tests and the perf gate."""
     from repro.core.lowering import crossval_record
+    from repro.core.policies import as_knob_tuple
     if isinstance(workloads, Workload):
         workloads = [workloads]
     npu_specs = [get_npu(n) if isinstance(n, str) else n for n in npus]
-    return [crossval_record(wl, npu)
-            for wl in workloads for npu in npu_specs]
+    grid = as_knob_tuple(knob_grid)
+    return [crossval_record(wl, npu, knobs=kn, knob_idx=ki)
+            for wl in workloads for npu in npu_specs
+            for ki, kn in enumerate(grid)]
 
 
 def sweep_fleet(scenario, knob_grid=None, **kw):
